@@ -1,0 +1,78 @@
+"""Paper Table 3a: training/updating time at the 70/85/100% data stages.
+
+Eagle: fit once on the first 70%, then INCREMENTAL updates for each +15%.
+Baselines: full retrain on all data seen so far at every stage.
+
+Methodology: every fit is run twice and the SECOND measurement is kept —
+jit compilation (absent from the paper's sklearn baselines) would
+otherwise dominate; steady-state serving always runs warm."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.data.routerbench import pairwise_feedback, winrate_targets
+from repro.routing.baselines import KNNRouter, MLPRouter, SVMRouter
+
+
+def run(seeds=C.SEEDS, verbose=True):
+    stages = (0.7, 0.85, 1.0)
+    names = ("eagle", "knn", "mlp", "svm")
+    times = {n: {s: [] for s in stages} for n in names}
+
+    for seed in seeds:
+        corpus, _ = C.build(seed)
+        eagle = None
+        prev_n = 0
+        for stage in stages:
+            idx = corpus.stage_indices(stage)
+            new_idx = idx[prev_n:]
+            fb_new = pairwise_feedback(corpus, new_idx,
+                                       seed=seed * 100 + int(stage * 100),
+                                       pairs_per_query=C.PAIRS_PER_QUERY)
+            if eagle is None:
+                C.fit_eagle(corpus, fb_new)          # warm the jit caches
+                eagle, secs = C.fit_eagle(corpus, fb_new)
+            else:
+                eagle.update(fb_new["emb"], fb_new["model_a"],
+                             fb_new["model_b"], fb_new["outcome"],
+                             query_id=fb_new["query_idx"])  # warm
+                secs = eagle.update(fb_new["emb"], fb_new["model_a"],
+                                    fb_new["model_b"], fb_new["outcome"],
+                                    query_id=fb_new["query_idx"])
+            times["eagle"][stage].append(secs)
+
+            # baselines retrain from scratch on the cumulative data
+            fb_all = pairwise_feedback(corpus, idx, seed=seed,
+                                       pairs_per_query=C.PAIRS_PER_QUERY)
+            emb, tgt, mask = winrate_targets(fb_all, corpus.n_models)
+            for name, r in (("knn", KNNRouter(corpus.costs)),
+                            ("mlp", MLPRouter(corpus.costs)),
+                            ("svm", SVMRouter(corpus.costs))):
+                r.fit(emb, tgt, mask)                # warm
+                times[name][stage].append(r.fit(emb, tgt, mask))
+            prev_n = len(idx)
+
+    table = {n: {f"{int(s*100)}%": float(np.median(times[n][s]))
+                 for s in stages} for n in names}
+    ratios = {}
+    for s in stages:
+        base_mean = np.mean([np.median(times[n][s])
+                             for n in ("knn", "mlp", "svm")])
+        ratios[f"{int(s*100)}%"] = float(
+            100.0 * np.median(times["eagle"][s]) / base_mean)
+    out = {"seconds": table, "eagle_pct_of_baseline_mean": ratios}
+    if verbose:
+        print("[table3a] seconds (median over seeds):")
+        for n in names:
+            row = "  ".join(f"{table[n][f'{int(s*100)}%']*1e3:9.1f}ms"
+                            for s in stages)
+            print(f"  {n:6s} {row}")
+        print(f"[table3a] eagle as % of baseline mean: "
+              + "  ".join(f"{k}={v:.2f}%" for k, v in ratios.items()))
+    C.save_json("table3a_timing.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Quickstart: build an Eagle router over the 10-model fleet, fit it on
+pairwise feedback, and route budget-constrained queries.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.router import EagleConfig, EagleRouter
+from repro.data.routerbench import (budget_grid, evaluate_router,
+                                    make_corpus, pairwise_feedback)
+
+
+def main():
+    # 1. a RouterBench-like corpus over the assigned 10-architecture fleet
+    corpus = make_corpus(seed=0, n_per_dataset=120, dim=64)
+    print(f"fleet: {corpus.model_names}")
+    print(f"costs: {np.round(corpus.costs, 2)}")
+
+    # 2. user feedback history (pairwise comparisons) for the train split
+    fb = pairwise_feedback(corpus, corpus.train_idx, seed=0,
+                           pairs_per_query=8)
+    print(f"history: {len(fb['outcome'])} comparisons "
+          f"over {len(corpus.train_idx)} prompts")
+
+    # 3. fit Eagle (training-free: one ELO pass + DB insert)
+    router = EagleRouter(corpus.model_names, corpus.costs,
+                         EagleConfig(embed_dim=64), db_capacity=2048)
+    secs = router.fit(fb["emb"], fb["model_a"], fb["model_b"], fb["outcome"],
+                      query_id=fb["query_idx"])
+    print(f"fit in {secs*1e3:.1f} ms; global ELO ratings:")
+    for name, r in zip(corpus.model_names,
+                       np.asarray(router.global_ratings)):
+        print(f"  {name:26s} {r:7.1f}")
+
+    # 4. route some test queries at different budgets
+    q = corpus.embeddings[corpus.test_idx[:4]]
+    for budget in (corpus.costs.min() * 1.5, corpus.costs.max()):
+        picks = np.asarray(router.route(q, float(budget)))
+        names = [corpus.model_names[i] for i in picks]
+        print(f"budget {budget:6.1f}: {names}")
+
+    # 5. cost-quality curve + AUC on the test split
+    res = evaluate_router(lambda e, b: router.route(e, b), corpus)
+    print(f"AUC over the budget grid: {res['auc']:.4f}")
+
+    # 6. online update with fresh feedback (no retraining)
+    fb2 = pairwise_feedback(corpus, corpus.test_idx[:50], seed=7,
+                            pairs_per_query=4)
+    secs = router.update(fb2["emb"], fb2["model_a"], fb2["model_b"],
+                         fb2["outcome"], query_id=fb2["query_idx"])
+    print(f"online update with {len(fb2['outcome'])} new records "
+          f"in {secs*1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+import subprocess, sys, os, itertools, time
+sys.path.insert(0, "src")
+ARCHS = ["whisper-large-v3","olmo-1b","mamba2-780m","qwen3-8b","phi3.5-moe-42b-a6.6b",
+         "internlm2-20b","gemma3-12b","llava-next-mistral-7b","zamba2-7b","deepseek-v3-671b"]
+SHAPES = ["train_4k","prefill_32k","decode_32k","long_500k"]
+env = dict(os.environ); env["PYTHONPATH"] = "src"
+t0=time.time()
+fails=[]
+for a, s, m in itertools.product(ARCHS, SHAPES, ("single","multi")):
+    r = subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", a, "--shape", s, "--mesh", m, "--force"],
+                       env=env, capture_output=True, text=True, timeout=2400)
+    out = (r.stdout.strip().splitlines() or [r.stderr.strip()[-300:]])[-1]
+    print(f"[{time.time()-t0:7.0f}s] {out}", flush=True)
+    if r.returncode != 0:
+        fails.append((a,s,m))
+print("FAILED:", fails)

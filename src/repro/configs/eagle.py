@@ -1,0 +1,24 @@
+"""The paper's own router configuration (Appendix A.1).
+
+P = 0.5 (global/local mix), N = 20 (neighbor prompts), K = 32 (ELO
+sensitivity). Embedding dim follows the corpus embedder — 1536 for
+stella_en_1.5B_v5 in the paper, 64 for the synthetic corpus used in the
+benchmarks here (see benchmarks/common.py).
+"""
+from repro.core.router import EagleConfig
+
+PAPER_CONFIG = EagleConfig(
+    p_global=0.5,
+    n_neighbors=20,
+    k_factor=32.0,
+    init_rating=1000.0,
+    embed_dim=1536,
+)
+
+BENCH_CONFIG = EagleConfig(
+    p_global=0.5,
+    n_neighbors=20,
+    k_factor=32.0,
+    init_rating=1000.0,
+    embed_dim=64,
+)

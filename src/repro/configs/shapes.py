@@ -1,0 +1,87 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins for the dry-run.
+
+The four assigned shapes map to the step that gets lowered:
+
+  train_4k     -> train_step   (tokens+targets, global_batch=256, S=4096)
+  prefill_32k  -> prefill      (tokens, global_batch=32, S=32768)
+  decode_32k   -> decode_step  (ONE new token; KV/state cache of S=32768)
+  long_500k    -> decode_step  (ONE token, 524288 context, batch=1) —
+                  sub-quadratic archs only (see supports()).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_cache
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+# Archs allowed to run long_500k: linear-state or sliding-window families.
+_LONG_OK = {"mamba2-780m", "zamba2-7b", "gemma3-12b"}
+
+
+def supports(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Whether (arch, shape) is runnable; reason string when skipped."""
+    if shape == "long_500k" and cfg.name not in _LONG_OK:
+        return False, ("full-attention arch without a sliding-window/"
+                       "block-sparse variant; 524k decode skipped per "
+                       "assignment (see DESIGN.md)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of (cfg, shape).
+
+    Returns {"kind": ..., "batch": ...} for train/prefill and
+    {"kind": "decode", "cache": ..., "tokens": ..., "index": ...} for
+    decode shapes. No device memory is allocated.
+    """
+    spec = SHAPES[shape]
+    s, b, kind = spec["seq_len"], spec["global_batch"], spec["kind"]
+    ok, why = supports(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape}: {why}")
+    act_dt = jnp.dtype(cfg.dtype)
+
+    if kind in ("train", "prefill"):
+        if cfg.arch_type == "vlm":
+            s_text = s - cfg.n_image_tokens
+            batch = {"tokens": _sds((b, s_text), jnp.int32),
+                     "img_embeds": _sds((b, cfg.n_image_tokens, cfg.d_model),
+                                        act_dt)}
+            tgt_shape = (b, s_text)
+        elif cfg.arch_type == "encdec":
+            batch = {"tokens": _sds((b, s), jnp.int32),
+                     "enc_embeds": _sds((b, cfg.n_audio_frames, cfg.d_model),
+                                        act_dt)}
+            tgt_shape = (b, s)
+        else:
+            batch = {"tokens": _sds((b, s), jnp.int32)}
+            tgt_shape = (b, s)
+        if kind == "train":
+            batch["targets"] = _sds(tgt_shape, jnp.int32)
+        return {"kind": kind, "batch": batch, "seq_len": s, "global_batch": b}
+
+    # decode: ONE new token against a cache of length s
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s, jnp.bfloat16))
+    return {
+        "kind": "decode",
+        "cache": cache,
+        "tokens": _sds((b, 1), jnp.int32),
+        "index": _sds((), jnp.int32),
+        "seq_len": s,
+        "global_batch": b,
+    }

@@ -1,0 +1,155 @@
+"""Eagle router: Global + Local ELO, budget-constrained selection.
+
+Implements the full workflow of Fig. 1 / §2.2 of the paper:
+
+  1. a query arrives with its prompt embedding;
+  2. Eagle-Local retrieves the N most similar historical queries from the
+     vector DB (cosine similarity) and replays their pairwise feedback
+     through ELO, starting from the global ratings;
+  3. Eagle-Global is the standing rating vector over all history;
+  4. Score(X) = P * Global(X) + (1-P) * Local(X);
+  5. the highest-scoring model with cost <= budget is selected;
+  6. (optional) a second model is sampled for comparison and the user's
+     preference is appended to the DB + folded into Global — the
+     training-free online update.
+
+Everything per-query is jittable; the router object holds online state
+(DB, global ratings) and exposes functional kernels underneath.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elo
+from repro.core.vectordb import VectorDB
+
+
+@dataclasses.dataclass(frozen=True)
+class EagleConfig:
+    """Paper Appendix A.1 parameters."""
+    p_global: float = 0.5   # P: weight of the global score
+    n_neighbors: int = 20   # N: local retrieval size
+    k_factor: float = 32.0  # K: ELO sensitivity
+    init_rating: float = elo.DEFAULT_RATING
+    embed_dim: int = 256
+    backend: str = "reference"  # similarity kernel backend
+
+
+def combine_scores(global_r, local_r, p: float):
+    """Score(X) = P * Global(X) + (1-P) * Local(X).  global_r: (M,),
+    local_r: (Q, M) -> (Q, M)."""
+    return p * global_r[None, :] + (1.0 - p) * local_r
+
+
+def select_within_budget(scores, costs, budget):
+    """Highest-scoring model with cost <= budget; falls back to the
+    cheapest model when nothing fits (never refuse service).
+
+    scores: (Q, M); costs: (M,); budget: scalar or (Q,).
+    Returns (choice (Q,), feasible (Q, M))."""
+    budget = jnp.asarray(budget)
+    if budget.ndim == 0:
+        budget = budget[None]
+    feasible = costs[None, :] <= budget[:, None]
+    masked = jnp.where(feasible, scores, -jnp.inf)
+    choice = jnp.argmax(masked, axis=-1)
+    fallback = jnp.argmin(costs)
+    any_ok = feasible.any(axis=-1)
+    return jnp.where(any_ok, choice, fallback), feasible
+
+
+class EagleRouter:
+    """Online router over a fleet of models."""
+
+    def __init__(self, model_names: Sequence[str], costs,
+                 cfg: EagleConfig = EagleConfig(), db_capacity: int = 4096):
+        self.cfg = cfg
+        self.model_names = list(model_names)
+        self.n_models = len(model_names)
+        self.costs = jnp.asarray(costs, jnp.float32)
+        assert self.costs.shape == (self.n_models,)
+        self.global_ratings = jnp.full((self.n_models,), cfg.init_rating,
+                                       jnp.float32)
+        self.db = VectorDB(cfg.embed_dim, db_capacity, backend=cfg.backend)
+
+    # -- state building ----------------------------------------------------
+    def fit(self, embeddings, model_a, model_b, outcome,
+            query_id=None) -> float:
+        """Initialize from a feedback history. Returns wall seconds (the
+        paper's Table 3a 'training time' measurement)."""
+        t0 = time.perf_counter()
+        self.db.add(embeddings, model_a, model_b, outcome, query_id)
+        self.global_ratings = elo.fit_global(
+            self.n_models, jnp.asarray(model_a, jnp.int32),
+            jnp.asarray(model_b, jnp.int32),
+            jnp.asarray(outcome, jnp.float32),
+            k=self.cfg.k_factor, init=self.cfg.init_rating)
+        self.global_ratings.block_until_ready()
+        return time.perf_counter() - t0
+
+    def update(self, embeddings, model_a, model_b, outcome,
+               query_id=None) -> float:
+        """Incremental online update: O(new records), no retraining."""
+        t0 = time.perf_counter()
+        self.db.add(embeddings, model_a, model_b, outcome, query_id)
+        self.global_ratings = elo.update_global(
+            self.global_ratings, jnp.asarray(model_a, jnp.int32),
+            jnp.asarray(model_b, jnp.int32), jnp.asarray(outcome, jnp.float32),
+            k=self.cfg.k_factor)
+        self.global_ratings.block_until_ready()
+        return time.perf_counter() - t0
+
+    # -- scoring -----------------------------------------------------------
+    def local_ratings(self, query_emb) -> jnp.ndarray:
+        idx, _, hit = self.db.query(query_emb, self.cfg.n_neighbors)
+        a, b, s, v = self.db.gather_feedback(idx, hit)
+        return elo.local_elo(self.global_ratings, a, b, s, v,
+                             k=self.cfg.k_factor)
+
+    def scores(self, query_emb) -> jnp.ndarray:
+        """(Q, M) combined quality scores (higher = better predicted)."""
+        local = self.local_ratings(query_emb)
+        return combine_scores(self.global_ratings, local, self.cfg.p_global)
+
+    def rank(self, query_emb) -> jnp.ndarray:
+        """(Q, M) model indices, best first."""
+        return jnp.argsort(-self.scores(query_emb), axis=-1)
+
+    def route(self, query_emb, budget) -> jnp.ndarray:
+        """(Q,) selected model index per query under the budget."""
+        choice, _ = select_within_budget(self.scores(query_emb), self.costs,
+                                         budget)
+        return choice
+
+    # -- feedback loop (workflow step 5) ------------------------------------
+    def feedback(self, query_emb, chosen, opponent, outcome):
+        """Record a user comparison between two served responses."""
+        return self.update(query_emb, chosen, opponent, outcome)
+
+
+# ---------------------------------------------------------------------------
+# Ablation variants (paper Appendix B)
+# ---------------------------------------------------------------------------
+
+class GlobalOnlyRouter(EagleRouter):
+    """Eagle-Global: ignores the local module (P=1)."""
+
+    def scores(self, query_emb):
+        q = jnp.atleast_2d(query_emb).shape[0]
+        return jnp.broadcast_to(self.global_ratings, (q, self.n_models))
+
+
+class LocalOnlyRouter(EagleRouter):
+    """Eagle-Local only: local replay from a FLAT prior (no global info)."""
+
+    def scores(self, query_emb):
+        idx, _, hit = self.db.query(query_emb, self.cfg.n_neighbors)
+        a, b, s, v = self.db.gather_feedback(idx, hit)
+        flat = jnp.full((self.n_models,), self.cfg.init_rating, jnp.float32)
+        return elo.local_elo(flat, a, b, s, v, k=self.cfg.k_factor)

@@ -1,0 +1,137 @@
+"""Vector database: prompt embeddings + grouped pairwise feedback.
+
+The retrieval unit is the PROMPT (paper §2.2: "retrieve the N nearest
+neighbors ... using the prompt embedding vector"): each stored prompt
+carries all pairwise feedback collected for it, and Eagle-Local replays
+the FULL feedback of the N retrieved prompts.
+
+Storage lives in host numpy (appends are the online hot path and must cost
+microseconds, not device round-trips); retrieval snapshots to device
+lazily — the snapshot invalidates on write and re-uploads at the next
+query, amortized across the query stream. On TPU the scores panel is the
+similarity_topk Pallas kernel; this container defaults to its jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as KOPS
+
+
+def _l2norm_np(x, eps=1e-9):
+    return x / (np.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+class VectorDB:
+    def __init__(self, dim: int, capacity: int = 4096,
+                 records_per_query: int = 8, backend: str = "reference"):
+        self.dim = dim
+        self.capacity = capacity
+        self.rcap = records_per_query
+        self.backend = backend
+        self.size = 0                      # prompts stored
+        self._alloc(capacity, records_per_query)
+        self._row_of: Dict[int, int] = {}
+        self._device: Optional[Tuple] = None  # cached device snapshot
+
+    def _alloc(self, cq, r):
+        self.emb = np.zeros((cq, self.dim), np.float32)
+        self.model_a = np.zeros((cq, r), np.int32)
+        self.model_b = np.zeros((cq, r), np.int32)
+        self.outcome = np.zeros((cq, r), np.float32)
+        self.valid = np.zeros((cq, r), bool)
+        self.n_rec = np.zeros((cq,), np.int32)
+
+    def _grow(self, need_q: int = 0, need_r: int = 0):
+        new_q = max(self.capacity, need_q,
+                    self.capacity * 2 if need_q > self.capacity else self.capacity)
+        new_r = max(self.rcap, need_r,
+                    self.rcap * 2 if need_r > self.rcap else self.rcap)
+        if (new_q, new_r) == (self.capacity, self.rcap):
+            return
+        emb = np.zeros((new_q, self.dim), np.float32)
+        emb[:self.capacity] = self.emb
+        self.emb = emb
+
+        def grow2(a, dtype):
+            out = np.zeros((new_q, new_r), dtype)
+            out[:self.capacity, :self.rcap] = a
+            return out
+
+        self.model_a = grow2(self.model_a, np.int32)
+        self.model_b = grow2(self.model_b, np.int32)
+        self.outcome = grow2(self.outcome, np.float32)
+        self.valid = grow2(self.valid, bool)
+        n_rec = np.zeros((new_q,), np.int32)
+        n_rec[:self.capacity] = self.n_rec
+        self.n_rec = n_rec
+        self.capacity, self.rcap = new_q, new_r
+
+    def add(self, emb, model_a, model_b, outcome, query_id=None):
+        """Append feedback records (host-side, O(batch)). emb: (B, D);
+        query_id: (B,) — records sharing an id group under one prompt."""
+        emb = np.atleast_2d(np.asarray(emb, np.float32))
+        model_a = np.asarray(model_a, np.int32).reshape(-1)
+        model_b = np.asarray(model_b, np.int32).reshape(-1)
+        outcome = np.asarray(outcome, np.float32).reshape(-1)
+        b = emb.shape[0]
+        if query_id is None:
+            base = -1 - len(self._row_of)
+            query_id = np.arange(base, base - b, -1)
+        query_id = np.asarray(query_id).reshape(-1)
+
+        for i in range(b):
+            qid = int(query_id[i])
+            row = self._row_of.get(qid)
+            if row is None:
+                if self.size >= self.capacity:
+                    self._grow(need_q=self.size + 1)
+                row = self.size
+                self._row_of[qid] = row
+                self.size += 1
+                self.emb[row] = _l2norm_np(emb[i])
+            slot = self.n_rec[row]
+            if slot >= self.rcap:
+                self._grow(need_r=slot + 1)
+            self.model_a[row, slot] = model_a[i]
+            self.model_b[row, slot] = model_b[i]
+            self.outcome[row, slot] = outcome[i]
+            self.valid[row, slot] = True
+            self.n_rec[row] += 1
+        self._device = None  # invalidate the device snapshot
+
+    def _snapshot(self):
+        if self._device is None:
+            self._device = (jnp.asarray(self.emb),)
+        return self._device
+
+    def query(self, q, n: int):
+        """Top-n prompts. Returns (idx (Q,n), scores (Q,n), hit (Q,n))."""
+        (emb_dev,) = self._snapshot()
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+        q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-9)
+        scores = KOPS.similarity(q, emb_dev, backend=self.backend)
+        mask = jnp.arange(self.capacity) < self.size
+        scores = jnp.where(mask[None, :], scores, -jnp.inf)
+        top_s, top_i = jax.lax.top_k(scores, min(n, self.capacity))
+        return top_i, top_s, jnp.isfinite(top_s)
+
+    def gather_feedback(self, idx, hit):
+        """idx: (Q,N) prompt rows -> flattened (Q, N*R) neighbor records
+        (model_a, model_b, outcome, valid) for the local ELO replay.
+
+        Replay order is FARTHEST neighbor first: ELO is recency-weighted
+        (later updates dominate the final ratings), so the most similar
+        prompts are replayed last to carry the most influence."""
+        idx = np.asarray(idx)[:, ::-1]
+        hit = np.asarray(hit)[:, ::-1]
+        qn = idx.shape
+        a = jnp.asarray(self.model_a[idx].reshape(qn[0], -1))
+        b = jnp.asarray(self.model_b[idx].reshape(qn[0], -1))
+        s = jnp.asarray(self.outcome[idx].reshape(qn[0], -1))
+        v = jnp.asarray((self.valid[idx] & hit[..., None]).reshape(qn[0], -1))
+        return a, b, s, v

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: batched local-ELO replay.
+
+Eagle-Local replays N neighbor feedback records per query. The replay is
+sequential in T (a true scan) but embarrassingly parallel across queries.
+GPU thinking assigns one thread per query; on TPU we keep a
+(block_q, n_models) rating tile resident in VMEM and apply each of the T
+updates as a one-hot masked add over the whole tile — pure VPU work with
+no gather/scatter (DESIGN.md §3).
+
+Layout: ratings (Q, M) fp32, records (Q, T) int32/fp32. Grid over Q
+blocks; T is walked with a fori_loop inside the kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _elo_kernel(r_ref, a_ref, b_ref, s_ref, v_ref, out_ref, *, k: float):
+    r0 = r_ref[...].astype(jnp.float32)           # (BQ, M)
+    a_all = a_ref[...]
+    b_all = b_ref[...]
+    s_all = s_ref[...].astype(jnp.float32)
+    v_all = v_ref[...].astype(jnp.float32)
+    m = r0.shape[1]
+    t = a_all.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+
+    def step(i, r):
+        a = jax.lax.dynamic_slice_in_dim(a_all, i, 1, axis=1)  # (BQ,1)
+        b = jax.lax.dynamic_slice_in_dim(b_all, i, 1, axis=1)
+        s = jax.lax.dynamic_slice_in_dim(s_all, i, 1, axis=1)[:, 0]
+        v = jax.lax.dynamic_slice_in_dim(v_all, i, 1, axis=1)[:, 0]
+        one_a = (iota == a).astype(jnp.float32)                # (BQ,M)
+        one_b = (iota == b).astype(jnp.float32)
+        r_a = jnp.sum(r * one_a, axis=-1)
+        r_b = jnp.sum(r * one_b, axis=-1)
+        e_a = 1.0 / (1.0 + jnp.exp2(jnp.log2(10.0) * (r_b - r_a) / 400.0))
+        delta = k * (s - e_a) * v
+        return r + delta[:, None] * (one_a - one_b)
+
+    out_ref[...] = jax.lax.fori_loop(0, t, step, r0)
+
+
+def elo_scan_pallas(ratings, a_idx, b_idx, outcome, valid, *, k: float = 32.0,
+                    block_q: int = 128, interpret: bool = False):
+    """ratings: (Q, M) initial; records (Q, T). Returns (Q, M) replayed."""
+    q, m = ratings.shape
+    t = a_idx.shape[1]
+    pq = (-q) % block_q
+    pad2 = lambda x: jnp.pad(x, ((0, pq), (0, 0))) if pq else x
+    args = (pad2(ratings.astype(jnp.float32)), pad2(a_idx), pad2(b_idx),
+            pad2(outcome.astype(jnp.float32)),
+            pad2(valid.astype(jnp.float32)))
+    grid = ((q + pq) // block_q,)
+    out = pl.pallas_call(
+        partial(_elo_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, t), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, t), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, t), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q + pq, m), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out[:q]

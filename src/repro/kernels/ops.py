@@ -1,0 +1,70 @@
+"""Jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
+
+backend:
+  "reference"        pure-jnp oracle (default — fast on CPU, used by the
+                     serving/benchmark paths in this container)
+  "pallas_interpret" the Pallas kernel body executed by the interpreter
+                     (CPU-correctness validation of the TPU kernels)
+  "pallas"           compiled Pallas (TPU target)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.elo_scan import elo_scan_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.similarity_topk import similarity_pallas
+
+
+def _dispatch(backend, ref_fn, pallas_fn, *args, **kw):
+    if backend == "reference":
+        return ref_fn(*args, **kw)
+    if backend == "pallas_interpret":
+        return pallas_fn(*args, interpret=True, **kw)
+    if backend == "pallas":
+        return pallas_fn(*args, **kw)
+    raise ValueError(backend)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def similarity(q, db, *, backend: str = "reference"):
+    """(Q,D) x (N,D) -> (Q,N) cosine scores."""
+    return _dispatch(backend, ref.similarity_ref, similarity_pallas, q, db)
+
+
+@partial(jax.jit, static_argnames=("backend", "n"))
+def similarity_topk(q, db, n: int, *, backend: str = "reference"):
+    """Fused retrieval: scores panel (kernel) + jax.lax.top_k reduce."""
+    scores = similarity(q, db, backend=backend)
+    return jax.lax.top_k(scores, n)
+
+
+@partial(jax.jit, static_argnames=("backend", "k"))
+def elo_scan(ratings, a_idx, b_idx, outcome, valid, *, k: float = 32.0,
+             backend: str = "reference"):
+    """Batched ELO replay: (Q,M) ratings x (Q,T) records -> (Q,M)."""
+    return _dispatch(backend, partial(ref.elo_scan_ref, k=k),
+                     partial(elo_scan_pallas, k=k),
+                     ratings, a_idx, b_idx, outcome, valid)
+
+
+@partial(jax.jit, static_argnames=("backend", "causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: str = "reference"):
+    return _dispatch(backend,
+                     partial(ref.flash_attention_ref, causal=causal,
+                             window=window),
+                     partial(flash_attention_pallas, causal=causal,
+                             window=window),
+                     q, k, v)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def decode_attention(q, k, v, kv_len, *, backend: str = "reference"):
+    return _dispatch(backend, ref.decode_attention_ref,
+                     decode_attention_pallas, q, k, v, kv_len)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_ref(q, db):
+    """Cosine-similarity score panel. q: (Q,D), db: (N,D) — both rows are
+    L2-normalized by the kernel, so the oracle normalizes too."""
+    qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-9)
+    dn = db / (jnp.linalg.norm(db, axis=-1, keepdims=True) + 1e-9)
+    return qn @ dn.T
+
+
+def elo_scan_ref(ratings, a_idx, b_idx, outcome, valid, k=32.0):
+    """Batched ELO replay. ratings: (Q,M); records: (Q,T)."""
+    q, m = ratings.shape
+    t = a_idx.shape[1]
+    r = ratings.astype(jnp.float32)
+    for i in range(t):
+        a, b = a_idx[:, i], b_idx[:, i]
+        r_a = jnp.take_along_axis(r, a[:, None], 1)[:, 0]
+        r_b = jnp.take_along_axis(r, b[:, None], 1)[:, 0]
+        e_a = 1.0 / (1.0 + 10.0 ** ((r_b - r_a) / 400.0))
+        delta = k * (outcome[:, i] - e_a) * valid[:, i].astype(jnp.float32)
+        one_a = jax.nn.one_hot(a, m, dtype=jnp.float32)
+        one_b = jax.nn.one_hot(b, m, dtype=jnp.float32)
+        r = r + delta[:, None] * (one_a - one_b)
+    return r
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,H,dh), k/v: (B,T,Hk,dh). fp32 softmax reference."""
+    b, s, h, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * dh ** -0.5
+    if causal:
+        qp = jnp.arange(s)[:, None]
+        kp = jnp.arange(t)[None, :]
+        mask = kp <= qp + (t - s)          # bottom-right aligned
+        if window:
+            mask &= kp > qp + (t - s) - window
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """Single-token decode. q: (B,H,dh); k/v: (B,T,Hk,dh); kv_len: (B,)
+    number of valid cache entries per sequence."""
+    b, h, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * dh ** -0.5
+    mask = jnp.arange(t)[None, :] < kv_len[:, None]
+    scores = jnp.where(mask[:, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", w, vv.astype(jnp.float32)).astype(q.dtype)

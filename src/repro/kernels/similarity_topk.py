@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: fused L2-normalize + cosine-similarity score panel.
+
+The router retrieval hot spot (DESIGN.md §3): queries x vector-DB scores.
+The DB is streamed HBM->VMEM in (block_n, D) panels; the query block stays
+resident; the MXU computes the (block_q, D)x(D, block_n) panel with the
+row normalization fused in VMEM. Top-k over the panel is left to
+jax.lax.top_k (data-dependent sorts map poorly onto the VPU — see ops.py).
+
+Blocks are MXU-aligned (multiples of 128 on the matmul dims); D is kept
+whole per panel (1536 floats/row ~ 6 KiB: a 256-row panel is 1.5 MiB,
+comfortably inside the ~16 MiB VMEM budget together with the query block).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sim_kernel(q_ref, db_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)
+    db = db_ref[...].astype(jnp.float32)
+    qn = q * jax.lax.rsqrt(jnp.sum(q * q, axis=-1, keepdims=True) + 1e-18)
+    dn = db * jax.lax.rsqrt(jnp.sum(db * db, axis=-1, keepdims=True) + 1e-18)
+    out_ref[...] = jax.lax.dot_general(
+        qn, dn, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def similarity_pallas(q, db, *, block_q: int = 128, block_n: int = 256,
+                      interpret: bool = False):
+    """q: (Q, D), db: (N, D) -> (Q, N) cosine scores (fp32)."""
+    qn, d = q.shape
+    n = db.shape[0]
+    pq = (-qn) % block_q
+    pn = (-n) % block_n
+    qp = jnp.pad(q, ((0, pq), (0, 0))) if pq else q
+    dbp = jnp.pad(db, ((0, pn), (0, 0))) if pn else db
+    grid = ((qn + pq) // block_q, (n + pn) // block_n)
+    out = pl.pallas_call(
+        _sim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn + pq, n + pn), jnp.float32),
+        interpret=interpret,
+    )(qp, dbp)
+    return out[:qn, :n]

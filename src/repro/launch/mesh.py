@@ -1,0 +1,36 @@
+"""Production meshes for the serving/training fleet.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before jax
+initializes its backend.
+
+  single pod : (16, 16)    axes (data, model)   = 256 chips (v5e pod)
+  multi-pod  : (2, 16, 16) axes (pod, data, model) = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devs = jax.devices()
+    if len(devs) != need:
+        # dry-run hosts expose 512 placeholder devices; the single-pod mesh
+        # uses the first 256 of them.
+        assert len(devs) >= need, (
+            f"mesh {shape} needs {need} devices, found {len(devs)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+        devs = devs[:need]
+    return jax.make_mesh(shape, axes, devices=devs)
+
+
+def make_test_mesh(model: int = 1, data: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — for tests."""
+    n = len(jax.devices())
+    assert model * data <= n, f"need {model * data} devices, have {n}"
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,61 @@
+"""Serving launcher: Eagle-routed multi-LLM fleet (reduced configs on CPU).
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 32 --fleet 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.core.router import EagleConfig, EagleRouter
+from repro.data.routerbench import make_corpus, pairwise_feedback
+from repro.serving.engine import FleetModel, Request, ServingEngine
+
+
+def build_engine(n_fleet: int = 4, dim: int = 64, seed: int = 0,
+                 compare_rate: float = 0.25):
+    names = ARCH_IDS[:n_fleet]
+    corpus = make_corpus(seed=seed, n_per_dataset=60, dim=dim,
+                         model_names=names,
+                         costs=np.linspace(1.0, 8.0, n_fleet))
+    fb = pairwise_feedback(corpus, corpus.train_idx, seed=seed,
+                           pairs_per_query=4)
+    router = EagleRouter(names, corpus.costs, EagleConfig(embed_dim=dim),
+                         db_capacity=1 << 15)
+    router.fit(fb["emb"], fb["model_a"], fb["model_b"], fb["outcome"])
+    fleet = {n: FleetModel(get_reduced_config(n), seed=i, max_len=64)
+             for i, n in enumerate(names)}
+    oracle = lambda emb, mi: float(np.random.default_rng(
+        abs(hash((emb[:2].tobytes(), mi))) % 2**32).random())
+    engine = ServingEngine(fleet, router, compare_rate=compare_rate,
+                           seed=seed, quality_oracle=oracle)
+    return engine, corpus
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--fleet", type=int, default=4)
+    ap.add_argument("--budget", type=float, default=5.0)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    engine, corpus = build_engine(args.fleet, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    test = corpus.test_idx[:args.requests]
+    reqs = [Request(tokens=rng.integers(0, 100, rng.integers(4, 12)).astype(np.int32),
+                    embedding=corpus.embeddings[i],
+                    budget=float(args.budget), max_new_tokens=args.max_new,
+                    rid=k)
+            for k, i in enumerate(test)]
+    responses = engine.serve(reqs)
+    for r in responses[:8]:
+        print(f"req {r.rid:3d} -> {r.model:24s} tokens {r.tokens.tolist()}")
+    print("stats:", engine.stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Training launcher.
+
+On a TPU pod this selects the production mesh and full config; on this CPU
+container use --reduced to run a real (small) training job end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --steps 50 --batch 4 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.training.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="build the (16,16) pod mesh (requires 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = None
+    if args.production_mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    print(f"training {cfg.name} ({cfg.arch_type}), "
+          f"{cfg.total_params()/1e6:.1f}M params, devices={len(jax.devices())}")
+    out = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                lr=args.lr, seed=args.seed,
+                ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+                mesh=mesh)
+    first, last = out["history"][0][1], out["history"][-1][1]
+    print(f"ce {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Mixture-of-Experts FFN with explicit expert parallelism.
+
+TPU-native design (see DESIGN.md §3): activations enter the block
+replicated across the "model" mesh axis (the usual tensor-parallel
+convention between ops); experts are sharded across "model". Inside a
+``shard_map`` region each model-shard:
+
+  1. computes the router gates for its local tokens (router weights are
+     replicated),
+  2. gathers the tokens routed to *its own* experts into a fixed-capacity
+     (E_local, C, d) buffer (gather, not a (T,E,C) one-hot einsum — the
+     one-hot dispatch tensor does not fit VMEM/HBM at 256 experts),
+  3. runs the gated-FFN on the buffer (batched over local experts),
+  4. scatter-adds the weighted outputs back to token positions,
+  5. psums over "model" to combine contributions from all expert shards.
+
+The final psum is the same collective a tensor-parallel dense FFN needs,
+so expert parallelism costs no extra collectives in this formulation;
+the trade is step-2/4 gathers plus capacity-dropping (capacity_factor).
+
+Works on a (data, model) or (pod, data, model) mesh; on a 1x1 test mesh
+the psum degenerates to identity.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _cast
+
+
+def init_moe(cfg: ModelConfig, rng):
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    ks = jax.random.split(rng, 5)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(cfg.param_dtype),
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff)) * s_in).astype(cfg.param_dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff)) * s_in).astype(cfg.param_dtype),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d)) * s_out).astype(cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(k1, (d, sff)) * s_in).astype(cfg.param_dtype),
+            "w_up": (jax.random.normal(k2, (d, sff)) * s_in).astype(cfg.param_dtype),
+            "w_down": (jax.random.normal(k3, (sff, d)) * (sff ** -0.5)).astype(cfg.param_dtype),
+        }
+    return p
+
+
+def _local_moe(cfg: ModelConfig, params, x, model_axis: Optional[str],
+               model_size: int, model_idx):
+    """Per-shard MoE body. x: (T_local, d) local tokens (replicated over
+    the model axis); expert weights local slices (E_local, ...)."""
+    t, d = x.shape
+    e_local = params["w_gate"].shape[0]
+    e_total = e_local * model_size
+    k = cfg.experts_per_tok
+
+    router_logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), params["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(router_logits, axis=-1)  # (T, E_total)
+    top_w, top_e = jax.lax.top_k(gates, k)          # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style), computed on full gates.
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(top_e, e_total, dtype=jnp.float32)).sum(1), axis=0)
+    frac_gates = jnp.mean(gates, axis=0)
+    aux = e_total * jnp.sum(frac_tokens * frac_gates)
+
+    capacity = int(max(k, cfg.capacity_factor * k * t / e_total))
+
+    # Flatten (token, slot) assignments and keep only local experts.
+    flat_e = top_e.reshape(-1)                    # (T*k,)
+    flat_w = top_w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    local_base = model_idx * e_local
+    is_local = (flat_e >= local_base) & (flat_e < local_base + e_local)
+    loc_e = jnp.where(is_local, flat_e - local_base, e_local)  # e_local = drop bin
+
+    # Position of each assignment within its expert (capacity slots).
+    onehot = jax.nn.one_hot(loc_e, e_local + 1, dtype=jnp.int32)  # (T*k, E+1)
+    pos = jnp.cumsum(onehot, axis=0) - 1                           # slot index
+    slot = jnp.take_along_axis(pos, loc_e[:, None], axis=1)[:, 0]
+    keep = is_local & (slot < capacity)
+    # Route dropped assignments to a trash slot.
+    loc_e_c = jnp.where(keep, loc_e, e_local)
+    slot_c = jnp.where(keep, slot, 0)
+
+    # Gather tokens into the (E_local+1, C, d) buffer.
+    buf = jnp.zeros((e_local + 1, capacity, d), x.dtype)
+    buf = buf.at[loc_e_c, slot_c].add(jnp.where(keep[:, None], x[flat_t], 0))
+    buf = buf[:e_local]
+
+    # Batched expert FFN.
+    w = _cast({k2: params[k2] for k2 in ("w_gate", "w_up", "w_down")}, x.dtype)
+    g = jnp.einsum("ecd,edf->ecf", buf, w["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, w["w_up"])
+    h = jax.nn.silu(g) * u
+    y_buf = jnp.einsum("ecf,efd->ecd", h, w["w_down"])  # (E_local, C, d)
+
+    # Scatter back with gate weights.
+    y_tok = y_buf[jnp.minimum(loc_e_c, e_local - 1), slot_c]  # (T*k, d)
+    contrib = jnp.where(keep[:, None], y_tok * flat_w[:, None].astype(x.dtype), 0)
+    y = jnp.zeros_like(x).at[flat_t].add(contrib)
+
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+    return y, aux
+
+
+_SMALL_T = 8192  # decode-sized token counts take the dense-dispatch path
+
+
+def _small_moe(cfg: ModelConfig, params, xt, constrain):
+    """Decode-path MoE: dense one-hot dispatch, no shard_map.
+
+    At decode T = batch (one token/sequence), so the dispatch buffer
+    (E, C, d) is tiny and the tokens can be REPLICATED across the mesh;
+    experts then shard over BOTH axes (("model","data") — 1 expert/chip at
+    deepseek scale), which is what lets a 671B MoE fit a 16 GiB/chip pod
+    for serving (EXPERIMENTS §Perf-C). The final combine psums a (T, d)
+    tensor — megabytes, not the weights."""
+    t, d = xt.shape
+    e = cfg.n_experts
+    k = cfg.experts_per_tok
+    c = constrain or (lambda y, a: y)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e, e, dtype=jnp.float32).sum(1), axis=0)
+    aux = e * jnp.sum(frac_tokens * jnp.mean(gates, axis=0))
+
+    cap = int(max(k, cfg.capacity_factor * k * t / e))
+    # slot assignment within each expert
+    flat_e = top_e.reshape(-1)
+    flat_w = top_w.reshape(-1).astype(xt.dtype)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    slot = jnp.take_along_axis(jnp.cumsum(onehot, 0) - 1,
+                               flat_e[:, None], 1)[:, 0]
+    keep = slot < cap
+    # (T*k, E, C) one-hot dispatch — small at decode scale
+    disp = (jax.nn.one_hot(flat_e, e, dtype=xt.dtype)[:, :, None]
+            * jax.nn.one_hot(jnp.where(keep, slot, 0), cap,
+                             dtype=xt.dtype)[:, None, :]
+            * keep.astype(xt.dtype)[:, None, None])
+    buf = jnp.einsum("aec,ad->ecd", disp, xt[flat_t])
+    buf = c(buf, ("experts", None, None))
+
+    w = _cast({k2: params[k2] for k2 in ("w_gate", "w_up", "w_down")},
+              xt.dtype)
+    g = jnp.einsum("ecd,edf->ecf", buf, w["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, w["w_up"])
+    h = c(jax.nn.silu(g) * u, ("experts", None, None))
+    y_buf = c(jnp.einsum("ecf,efd->ecd", h, w["w_down"]),
+              ("experts", None, None))
+    y = jnp.einsum("aec,ecd,a->ad", disp, y_buf, flat_w)
+    y = jax.ops.segment_sum(y, flat_t, num_segments=t)
+    return y, aux.astype(jnp.float32)
+
+
+def apply_moe(cfg: ModelConfig, params, x, mesh=None, constrain=None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Large T: expert-parallel shard_map
+    over 'model' (replicated activations). Small T (decode): dense
+    dispatch with experts shardable over both mesh axes."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+
+    if b * s <= _SMALL_T:
+        routed = {k: params[k] for k in ("router", "w_gate", "w_up",
+                                         "w_down")}
+        y, aux = _small_moe(cfg, routed, xt, constrain)
+    elif mesh is not None and "model" in mesh.axis_names and mesh.shape["model"] > 1:
+        batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+        in_specs = (
+            P(batch_axes, None),                      # tokens: batch-sharded
+            {  # params: experts sharded over model, router replicated
+                "router": P(None, None),
+                "w_gate": P("model", None, None),
+                "w_up": P("model", None, None),
+                "w_down": P("model", None, None),
+            },
+        )
+        out_specs = (P(batch_axes, None), P())
+        routed = {k: params[k] for k in ("router", "w_gate", "w_up", "w_down")}
+
+        def body(xt_l, p_l):
+            idx = jax.lax.axis_index("model")
+            y_l, aux_l = _local_moe(cfg, p_l, xt_l, "model", mesh.shape["model"], idx)
+            # aux varies across batch shards (different tokens) — average it
+            # so the output is genuinely replicated as out_specs declares.
+            return y_l, jax.lax.pmean(aux_l, batch_axes)
+
+        y, aux = jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False)(xt, routed)
+    else:
+        routed = {k: params[k] for k in ("router", "w_gate", "w_up", "w_down")}
+        y, aux = _local_moe(cfg, routed, xt, None, 1, 0)
+
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        sp = _cast(params["shared"], x.dtype)
+        g = jnp.einsum("bsd,df->bsf", x, sp["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, sp["w_up"])
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, sp["w_down"])
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,189 @@
+"""Mamba2 block in the SSD (state-space duality) chunked form.
+
+Hardware adaptation (DESIGN.md §3): the CUDA Mamba kernel is a fused
+recurrent selective scan; on TPU we use the Mamba2 paper's block
+decomposition, which rewrites the recurrence as
+
+  * intra-chunk: a (Q x Q) masked attention-like matmul per chunk (MXU),
+  * chunk states: decay-weighted B^T x contractions per chunk (MXU),
+  * inter-chunk: a short ``lax.scan`` over chunk states,
+  * output: C projected against carried states (MXU).
+
+This makes the op matmul-dominant, which is what the MXU wants, and the
+sequential part shrinks from S steps to S/Q steps.
+
+Tensor-parallel layout: projections are SPLIT per stream (z, x, B, C, dt)
+rather than fused as in the CUDA implementation, so the head-structured
+streams (z, x, dt, and the SSM state) shard over the "model" mesh axis
+while the small ngroups-structured B/C streams stay replicated. A fused
+in_proj would interleave sharded and replicated segments in one output
+dimension, which GSPMD cannot partition cleanly.
+
+Decode keeps a recurrent state h: (B, H, P, N) plus rolling conv windows,
+and performs the exact single-step recurrence h' = a h + dt (B^T x).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _cast
+
+
+def init_mamba2(cfg: ModelConfig, rng):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    gn = g * n
+    ks = jax.random.split(rng, 9)
+    s = d ** -0.5
+    k = cfg.ssm_conv
+    return {
+        "in_z": (jax.random.normal(ks[0], (d, di)) * s).astype(cfg.param_dtype),
+        "in_x": (jax.random.normal(ks[1], (d, di)) * s).astype(cfg.param_dtype),
+        "in_B": (jax.random.normal(ks[2], (d, gn)) * s).astype(cfg.param_dtype),
+        "in_C": (jax.random.normal(ks[3], (d, gn)) * s).astype(cfg.param_dtype),
+        "in_dt": (jax.random.normal(ks[4], (d, h)) * s).astype(cfg.param_dtype),
+        "conv_x_w": (jax.random.normal(ks[5], (k, di)) * 0.1).astype(cfg.param_dtype),
+        "conv_x_b": jnp.zeros((di,), cfg.param_dtype),
+        "conv_B_w": (jax.random.normal(ks[6], (k, gn)) * 0.1).astype(cfg.param_dtype),
+        "conv_B_b": jnp.zeros((gn,), cfg.param_dtype),
+        "conv_C_w": (jax.random.normal(ks[7], (k, gn)) * 0.1).astype(cfg.param_dtype),
+        "conv_C_b": jnp.zeros((gn,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(cfg.param_dtype),
+        "D": jnp.ones((h,), cfg.param_dtype),
+        "dt_bias": jnp.full((h,), -2.0, cfg.param_dtype),
+        "norm_scale": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": (jax.random.normal(ks[8], (di, d)) * di ** -0.5).astype(cfg.param_dtype),
+    }
+
+
+def _gated_rmsnorm(x, z, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _causal_conv(x, w, b, prev=None):
+    """Depthwise causal conv, window k. x: (B,S,C); w: (k,C); prev: (B,k-1,C)
+    rolling window from the cache (zeros when absent). Returns (y, window
+    tail (B,k-1,C))."""
+    k = w.shape[0]
+    s = x.shape[1]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    window = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    y = sum(window[:, i:i + s, :] * w[i] for i in range(k))
+    return jax.nn.silu(y + b), window[:, -(k - 1):, :]
+
+
+def _ssd_chunked(xh, a_log, bh, ch, chunk: int, h0=None):
+    """SSD over the full sequence.
+
+    xh: (B,S,H,P) inputs (already dt-scaled);  a_log: (B,S,H) per-step log
+    decay (negative);  bh/ch: (B,S,H,N).  Returns (y: (B,S,H,P),
+    h_final: (B,H,P,N)).
+    """
+    b, s, h, p = xh.shape
+    n = bh.shape[-1]
+    q = chunk
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    r = lambda t: t.reshape(b, nc, q, *t.shape[2:])
+    xh, a_log, bh, ch = r(xh), r(a_log), r(bh), r(ch)
+    a_log = a_log.astype(jnp.float32)
+
+    csum = jnp.cumsum(a_log, axis=2)                      # (B,NC,Q,H)
+    # intra-chunk (diagonal block): L[i,j] = exp(csum_i - csum_j) for i>=j
+    li = csum[:, :, :, None, :] - csum[:, :, None, :, :]  # (B,NC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", ch.astype(jnp.float32),
+                        bh.astype(jnp.float32))
+    y_diag = jnp.einsum("bcqkh,bcqkh,bckhp->bcqhp", scores, l_mat,
+                        xh.astype(jnp.float32))
+
+    # per-chunk input state: sum_j exp(csum_Q - csum_j) B_j x_j^T
+    decay_in = jnp.exp(csum[:, :, -1:, :] - csum)         # (B,NC,Q,H)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", decay_in,
+                        bh.astype(jnp.float32), xh.astype(jnp.float32))
+
+    # inter-chunk scan over chunk boundaries
+    chunk_decay = jnp.exp(csum[:, :, -1, :])              # (B,NC,H)
+    init = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp                                     # (B,H,P,N), (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                 # emit state *before* chunk
+
+    hs_last, h_prev = jax.lax.scan(
+        step, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                        # (B,NC,H,P,N) state entering chunk
+
+    # contribution of carried state to each position
+    decay_out = jnp.exp(csum)                             # (B,NC,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch.astype(jnp.float32),
+                       h_prev, decay_out)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, hs_last
+
+
+def apply_mamba2(cfg: ModelConfig, params, x, *, cache=None):
+    """x: (B,S,d). cache: None or dict(conv_x/conv_B/conv_C rolling windows,
+    ssm:(B,H,P,N)) for stateful decode. Returns (y, new_cache)."""
+    p = _cast(params, x.dtype)
+    b, s, _ = x.shape
+    h, pd, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_ngroups
+
+    z = jnp.einsum("bsd,dk->bsk", x, p["in_z"])
+    xs = jnp.einsum("bsd,dk->bsk", x, p["in_x"])
+    bb = jnp.einsum("bsd,dk->bsk", x, p["in_B"])
+    cc = jnp.einsum("bsd,dk->bsk", x, p["in_C"])
+    dt = jnp.einsum("bsd,dk->bsk", x, p["in_dt"])
+
+    pc = cache or {}
+    xs_c, w_x = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"], pc.get("conv_x"))
+    bb_c, w_b = _causal_conv(bb, p["conv_B_w"], p["conv_B_b"], pc.get("conv_B"))
+    cc_c, w_c = _causal_conv(cc, p["conv_C_w"], p["conv_C_b"], pc.get("conv_C"))
+
+    xs_h = xs_c.reshape(b, s, h, pd)
+    rep = h // g
+    bh = jnp.repeat(bb_c.reshape(b, s, g, n), rep, axis=2)   # (B,S,H,N)
+    chh = jnp.repeat(cc_c.reshape(b, s, g, n), rep, axis=2)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))             # (H,) negative
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a_log = dt_sp * a                                         # (B,S,H) log decay
+    x_dt = xs_h.astype(jnp.float32) * dt_sp[..., None]        # dt-scaled input
+
+    if cache is None:
+        y, h_last = _ssd_chunked(x_dt, a_log, bh, chh, min(cfg.ssm_chunk, s))
+        new_cache = None
+    else:
+        h0 = cache["ssm"].astype(jnp.float32)                 # (B,H,P,N)
+        if s == 1:
+            dec = jnp.exp(a_log[:, 0])                        # (B,H)
+            upd = jnp.einsum("bhn,bhp->bhpn", bh[:, 0].astype(jnp.float32),
+                             x_dt[:, 0])
+            h_new = h0 * dec[:, :, None, None] + upd
+            y = jnp.einsum("bhn,bhpn->bhp", chh[:, 0].astype(jnp.float32),
+                           h_new)[:, None]                    # (B,1,H,P)
+            h_last = h_new
+        else:
+            y, h_last = _ssd_chunked(x_dt, a_log, bh, chh,
+                                     min(cfg.ssm_chunk, s), h0=h0)
+        new_cache = {
+            "conv_x": w_x.astype(cache["conv_x"].dtype),
+            "conv_B": w_b.astype(cache["conv_B"].dtype),
+            "conv_C": w_c.astype(cache["conv_C"].dtype),
+            "ssm": h_last.astype(cache["ssm"].dtype),
+        }
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs_h.astype(jnp.float32)
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"]), new_cache

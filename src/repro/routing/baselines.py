@@ -1,0 +1,191 @@
+"""Baseline routers from the paper (RouterBench-style): KNN, MLP, SVM.
+
+All three are quality-vector regressors f(embedding) -> (M,) predicted
+quality, trained on the pointwise quality matrix (richer supervision than
+Eagle's pairwise feedback — same asymmetry as the paper). Implemented in
+JAX on our own training substrate (no sklearn in this environment):
+
+  * KNN — 40 nearest neighbors by cosine similarity (the common settings
+    of Appendix A.2), mean quality of neighbors; "training" = storing the
+    corpus (and re-embedding it), which is why its fit is slow-ish and its
+    update requires rebuilding the index.
+  * MLP — two layers, hidden 100, ReLU, MSE, AdamW full-batch epochs.
+  * SVM — LinearSVR with epsilon=0 per model: epsilon-insensitive L1 loss
+    + L2 reg, subgradient descent.
+
+fit()/update() return wall seconds to reproduce Table 3a. Baselines
+RETRAIN FROM SCRATCH on update (the paper's point: no incremental path).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.router import select_within_budget
+from repro.kernels import ops as KOPS
+from repro.training.optim import AdamW
+
+
+class BaselineRouter:
+    """Shared budget-selection logic."""
+
+    def __init__(self, costs):
+        self.costs = jnp.asarray(costs, jnp.float32)
+
+    def predict(self, emb) -> jnp.ndarray:  # (Q, M) quality scores
+        raise NotImplementedError
+
+    def route(self, emb, budget):
+        choice, _ = select_within_budget(self.predict(emb), self.costs, budget)
+        return choice
+
+    def fit(self, emb, quality, mask=None) -> float:
+        """mask: optional (Q, M) observed-entry mask — the feedback-only
+        supervision regime (targets are win-rates derived from the same
+        pairwise comparisons Eagle consumes)."""
+        raise NotImplementedError
+
+    def update(self, emb, quality, mask=None) -> float:
+        """Baselines have no incremental path: full retrain (paper §3.2)."""
+        return self.fit(emb, quality, mask)
+
+
+class KNNRouter(BaselineRouter):
+    def __init__(self, costs, n_neighbors: int = 40,
+                 backend: str = "reference"):
+        super().__init__(costs)
+        self.n = n_neighbors
+        self.backend = backend
+        self.emb: Optional[jnp.ndarray] = None
+        self.quality: Optional[jnp.ndarray] = None
+        self.mask: Optional[jnp.ndarray] = None
+
+    def fit(self, emb, quality, mask=None) -> float:
+        t0 = time.perf_counter()
+        self.emb = jnp.asarray(emb, jnp.float32)
+        self.quality = jnp.asarray(quality, jnp.float32)
+        self.mask = (jnp.asarray(mask, jnp.float32) if mask is not None
+                     else jnp.ones_like(self.quality))
+        # build = normalize the index (KNN "training")
+        self.emb = self.emb / (jnp.linalg.norm(self.emb, axis=-1,
+                                               keepdims=True) + 1e-9)
+        self.emb.block_until_ready()
+        return time.perf_counter() - t0
+
+    def predict(self, emb):
+        scores, idx = KOPS.similarity_topk(
+            jnp.asarray(emb, jnp.float32), self.emb,
+            min(self.n, self.emb.shape[0]), backend=self.backend)
+        # plain KNN mean (Appendix A.2: "40 nearest neighbors with cosine
+        # similarity" — distance only selects the neighborhood); with
+        # feedback-only supervision, unobserved entries are masked out.
+        m = self.mask[idx]
+        num = jnp.sum(self.quality[idx] * m, axis=1)
+        den = jnp.sum(m, axis=1)
+        return jnp.where(den > 0, num / jnp.maximum(den, 1), 0.5)
+
+
+class MLPRouter(BaselineRouter):
+    def __init__(self, costs, hidden: int = 100, epochs: int = 300,
+                 lr: float = 1e-3, seed: int = 0):
+        super().__init__(costs)
+        self.hidden = hidden
+        self.epochs = epochs
+        self.opt = AdamW(lr=lr, weight_decay=0.0, grad_clip=0.0)
+        self.seed = seed
+        self.params = None
+
+    def _init(self, d, m):
+        k1, k2 = jax.random.split(jax.random.key(self.seed))
+        return {
+            "w1": jax.random.normal(k1, (d, self.hidden)) * d ** -0.5,
+            "b1": jnp.zeros((self.hidden,)),
+            "w2": jax.random.normal(k2, (self.hidden, m)) * self.hidden ** -0.5,
+            "b2": jnp.zeros((m,)),
+        }
+
+    @staticmethod
+    def _fwd(params, x):
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    def fit(self, emb, quality, mask=None) -> float:
+        x = jnp.asarray(emb, jnp.float32)
+        y = jnp.asarray(quality, jnp.float32)
+        m = (jnp.asarray(mask, jnp.float32) if mask is not None
+             else jnp.ones_like(y))
+        t0 = time.perf_counter()
+        params = self._init(x.shape[1], y.shape[1])
+        state = self.opt.init(params)
+
+        def loss(p):
+            se = (self._fwd(p, x) - y) ** 2 * m
+            return se.sum() / jnp.maximum(m.sum(), 1.0)
+
+        @jax.jit
+        def step(p, s):
+            l, g = jax.value_and_grad(loss)(p)
+            p, s = self.opt.update(g, s, p)
+            return p, s, l
+
+        for _ in range(self.epochs):
+            params, state, l = step(params, state)
+        jax.block_until_ready(params)
+        self.params = params
+        return time.perf_counter() - t0
+
+    def predict(self, emb):
+        return self._fwd(self.params, jnp.asarray(emb, jnp.float32))
+
+
+class SVMRouter(BaselineRouter):
+    """LinearSVR (epsilon=0) per model: L1-insensitive loss, subgradient."""
+
+    def __init__(self, costs, epochs: int = 300, lr: float = 5e-3,
+                 reg: float = 1e-4, epsilon: float = 0.0):
+        super().__init__(costs)
+        self.epochs = epochs
+        self.lr = lr
+        self.reg = reg
+        self.epsilon = epsilon
+        self.w = None
+        self.b = None
+
+    def fit(self, emb, quality, mask=None) -> float:
+        x = jnp.asarray(emb, jnp.float32)
+        y = jnp.asarray(quality, jnp.float32)
+        mk = (jnp.asarray(mask, jnp.float32) if mask is not None
+              else jnp.ones_like(y))
+        t0 = time.perf_counter()
+        d, m = x.shape[1], y.shape[1]
+        w = jnp.zeros((d, m))
+        b = jnp.zeros((m,))
+        opt = AdamW(lr=self.lr, weight_decay=0.0, grad_clip=0.0)
+        state = opt.init({"w": w, "b": b})
+        eps = self.epsilon
+
+        def loss(p):
+            r = x @ p["w"] + p["b"] - y
+            hinge = jnp.maximum(jnp.abs(r) - eps, 0.0) * mk  # eps-insensitive
+            return hinge.sum() / jnp.maximum(mk.sum(), 1.0) \
+                + self.reg * jnp.sum(p["w"] ** 2)
+
+        @jax.jit
+        def step(p, s):
+            l, g = jax.value_and_grad(loss)(p)
+            return (*opt.update(g, s, p), l)
+
+        p = {"w": w, "b": b}
+        for _ in range(self.epochs):
+            p, state, l = step(p, state)
+        jax.block_until_ready(p)
+        self.w, self.b = p["w"], p["b"]
+        return time.perf_counter() - t0
+
+    def predict(self, emb):
+        return jnp.asarray(emb, jnp.float32) @ self.w + self.b

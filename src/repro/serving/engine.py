@@ -1,0 +1,147 @@
+"""Serving engine: the Eagle router in front of the model fleet.
+
+Workflow per Fig. 1 of the paper:
+  ① requests arrive (prompt tokens + prompt embedding + budget)
+  ②/③ Eagle ranks the fleet per request and picks the best model within
+     the budget
+  ④ requests are grouped per chosen model, batch-prefilled and greedily
+     decoded
+  ⑤ with probability `compare_rate` a second model also answers and a
+     simulated user preference is appended to the DB + ELO (the online,
+     training-free update)
+
+The fleet here instantiates REDUCED configs of the assigned architectures
+(this is a CPU container); the production-mesh versions of the same step
+functions are what the dry-run lowers (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.router import EagleRouter
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray            # (S,) int32 prompt
+    embedding: np.ndarray         # (D,) prompt embedding
+    budget: float
+    max_new_tokens: int = 8
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    model: str
+    tokens: np.ndarray
+    latency_s: float
+
+
+class FleetModel:
+    """One servable model: jitted prefill + decode with greedy sampling."""
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0,
+                 max_len: int = 128):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.params = T.init_params(cfg, jax.random.key(seed))
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(cfg, p, b, max_len,
+                                   cache_dtype=jnp.float32))
+        self._decode = jax.jit(
+            lambda p, c, t, i: T.decode_step(cfg, p, c, t, i))
+
+    def generate(self, tokens: np.ndarray, max_new: int) -> np.ndarray:
+        """tokens: (B, S) -> (B, max_new) greedy continuation."""
+        b, s = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if self.cfg.arch_type == "encdec":
+            batch["enc_embeds"] = jnp.zeros(
+                (b, self.cfg.n_audio_frames, self.cfg.d_model), jnp.float32)
+        if self.cfg.arch_type == "vlm":
+            batch["img_embeds"] = jnp.zeros(
+                (b, self.cfg.n_image_tokens, self.cfg.d_model), jnp.float32)
+            s += self.cfg.n_image_tokens
+        logits, cache = self._prefill(self.params, batch)
+        outs = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for i in range(max_new):
+            outs.append(np.asarray(tok)[:, 0])
+            if i == max_new - 1:
+                break
+            logits, cache = self._decode(self.params, cache, tok, s + i)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return np.stack(outs, axis=1)
+
+
+class ServingEngine:
+    def __init__(self, fleet: Dict[str, FleetModel], router: EagleRouter,
+                 compare_rate: float = 0.2, seed: int = 0,
+                 quality_oracle: Optional[Callable] = None):
+        assert list(fleet) == router.model_names, "fleet/router order mismatch"
+        self.fleet = fleet
+        self.router = router
+        self.compare_rate = compare_rate
+        self.rng = np.random.default_rng(seed)
+        self.quality_oracle = quality_oracle  # (emb, model_idx) -> quality
+        self.stats = {"served": 0, "feedback": 0, "per_model":
+                      {m: 0 for m in fleet}}
+
+    def serve(self, requests: Sequence[Request]) -> List[Response]:
+        t0 = time.perf_counter()
+        embs = np.stack([r.embedding for r in requests])
+        budgets = np.asarray([r.budget for r in requests], np.float32)
+        scores = np.asarray(self.router.scores(embs))
+        feasible = np.asarray(self.router.costs)[None, :] <= budgets[:, None]
+        masked = np.where(feasible, scores, -np.inf)
+        choices = np.where(feasible.any(1), masked.argmax(1),
+                           int(np.argmin(np.asarray(self.router.costs))))
+
+        # ④ group by chosen model, pad to a batch, generate
+        responses: List[Response] = [None] * len(requests)  # type: ignore
+        for mi, name in enumerate(self.router.model_names):
+            sel = np.nonzero(choices == mi)[0]
+            if sel.size == 0:
+                continue
+            max_s = max(len(requests[i].tokens) for i in sel)
+            toks = np.zeros((sel.size, max_s), np.int32)
+            for row, i in enumerate(sel):
+                t = requests[i].tokens
+                toks[row, :len(t)] = t
+            max_new = max(requests[i].max_new_tokens for i in sel)
+            gen = self.fleet[name].generate(toks, max_new)
+            dt = time.perf_counter() - t0
+            for row, i in enumerate(sel):
+                responses[i] = Response(requests[i].rid, name,
+                                        gen[row, :requests[i].max_new_tokens],
+                                        dt)
+                self.stats["per_model"][name] += 1
+        self.stats["served"] += len(requests)
+
+        # ⑤ optional second-model comparison -> online router update
+        if self.quality_oracle is not None and self.compare_rate > 0:
+            cmp_sel = self.rng.random(len(requests)) < self.compare_rate
+            idxs = np.nonzero(cmp_sel)[0]
+            if idxs.size:
+                a = choices[idxs]
+                b = np.asarray([self.rng.choice(
+                    [m for m in range(len(self.fleet)) if m != ai])
+                    for ai in a], np.int32)
+                qa = np.asarray([self.quality_oracle(embs[i], int(ai))
+                                 for i, ai in zip(idxs, a)])
+                qb = np.asarray([self.quality_oracle(embs[i], int(bi))
+                                 for i, bi in zip(idxs, b)])
+                outcome = np.where(qa == qb, 0.5, (qa > qb).astype(np.float32))
+                self.router.feedback(embs[idxs], a, b, outcome)
+                self.stats["feedback"] += int(idxs.size)
+        return responses

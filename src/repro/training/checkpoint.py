@@ -1,0 +1,78 @@
+"""Checkpointing without orbax: flattened-pytree .npz with a JSON treedef.
+
+Works for params, optimizer state and router state (the vector DB +
+global ratings are plain arrays). Save gathers to host; restore rebuilds
+the pytree and (optionally) re-shards via device_put with the given
+sharding tree.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _to_numpy(leaf):
+    """numpy view; bf16 (no numpy native dtype) round-trips as uint16."""
+    a = np.asarray(leaf)
+    if a.dtype == jnp.bfloat16:
+        return a.view(np.uint16), "bfloat16"
+    return a, str(a.dtype)
+
+
+def save(path, tree: Pytree, step: Optional[int] = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    pairs = [_to_numpy(l) for l in leaves]
+    arrays = {f"leaf_{i}": a for i, (a, _) in enumerate(pairs)}
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves),
+            "step": step, "dtypes": [d for _, d in pairs]}
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def restore(path, like: Pytree, shardings: Optional[Pytree] = None) -> Pytree:
+    """Restore into the structure of `like` (shape/dtype template)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        leaves = []
+        for i, dt in enumerate(meta["dtypes"]):
+            a = z[f"leaf_{i}"]
+            if dt == "bfloat16":
+                a = a.view(jnp.bfloat16)
+            leaves.append(a)
+    _, treedef = jax.tree.flatten(like)
+    tree = jax.tree.unflatten(treedef, leaves)
+    tmpl_leaves = jax.tree.leaves(like)
+    for got, want in zip(leaves, tmpl_leaves):
+        assert got.shape == tuple(want.shape), (got.shape, want.shape)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(jnp.asarray(a), s), tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = []
+    for f in d.glob("step_*.npz"):
+        try:
+            steps.append(int(f.stem.split("_")[1]))
+        except ValueError:
+            pass
+    return max(steps) if steps else None

@@ -1,0 +1,82 @@
+"""Training loop: data iterator -> jitted train_step -> checkpoints.
+
+Used by examples/train_small.py (an end-to-end ~100M-param run on CPU) and
+by launch/train.py (the production-mesh entry point; on this host the mesh
+is the test mesh, on a pod it is make_production_mesh()).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as SH
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training import checkpoint as CKPT
+from repro.training.optim import AdamW
+
+
+def synthetic_lm_batches(cfg: ModelConfig, batch: int, seq: int,
+                         seed: int = 0) -> Iterator[Dict[str, Any]]:
+    """Self-supervised synthetic corpus: structured integer sequences
+    (noisy arithmetic progressions over the vocab) so the loss has signal
+    to descend, unlike uniform random tokens."""
+    rng = np.random.default_rng(seed)
+    while True:
+        start = rng.integers(0, cfg.vocab, (batch, 1))
+        step = rng.integers(1, 17, (batch, 1))
+        seqs = (start + step * np.arange(seq + 1)[None, :]) % cfg.vocab
+        flip = rng.random((batch, seq + 1)) < 0.02
+        noise = rng.integers(0, cfg.vocab, (batch, seq + 1))
+        seqs = np.where(flip, noise, seqs)
+        yield {
+            "tokens": jnp.asarray(seqs[:, :-1], jnp.int32),
+            "targets": jnp.asarray(seqs[:, 1:], jnp.int32),
+        }
+
+
+def make_train_step(cfg: ModelConfig, optimizer: AdamW, mesh=None,
+                    constrain=None):
+    constrain = constrain or (lambda x, a: x)
+
+    def train_step(params, opt_state, batch):
+        def lfn(p):
+            return T.loss_fn(cfg, p, batch, mesh=mesh, constrain=constrain)
+        (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, *, steps: int = 100, batch: int = 8,
+          seq: int = 128, lr: float = 3e-4, seed: int = 0,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+          log_every: int = 10, mesh=None,
+          data: Optional[Iterator] = None) -> Dict[str, Any]:
+    """Run a small training job; returns the loss history and final params."""
+    params = T.init_params(cfg, jax.random.key(seed))
+    opt = AdamW(lr=lr)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, mesh=mesh))
+    it = data if data is not None else synthetic_lm_batches(cfg, batch, seq, seed)
+
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch_i = next(it)
+        params, opt_state, metrics = step_fn(params, opt_state, batch_i)
+        if i % log_every == 0 or i == steps - 1:
+            ce = float(metrics["ce"])
+            history.append((i, ce))
+            print(f"step {i:5d}  ce {ce:.4f}  "
+                  f"({(time.perf_counter()-t0)/(i+1):.2f}s/step)", flush=True)
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            CKPT.save(f"{ckpt_dir}/step_{i+1}.npz",
+                      {"params": params, "opt": opt_state}, step=i + 1)
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,82 @@
+"""AdamW built from scratch (no optax in this environment).
+
+State is a pytree mirroring params: {"m", "v"} in ``state_dtype`` (fp32 by
+default; bf16 is a memory-reduction knob used in §Perf) plus a scalar step.
+The update is fully jittable and shards like the params (same tree specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+    def init(self, params: Pytree) -> Pytree:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Pytree, state: Pytree, params: Pytree
+               ) -> Tuple[Pytree, Pytree]:
+        step = state["step"] + 1
+        lr = self.lr if self.schedule is None else self.lr * self.schedule(step)
+
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        else:
+            scale = 1.0
+
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32) * scale
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g32
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            mhat = m32 / c1
+            vhat = v32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (new_p.astype(p.dtype), m32.astype(self.state_dtype),
+                    v32.astype(self.state_dtype))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def cosine_schedule(warmup: int, total: int) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return fn

@@ -1,0 +1,161 @@
+"""Unit + property tests for the Eagle core (ELO, vector DB, router)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import elo
+from repro.core.router import (EagleConfig, EagleRouter, combine_scores,
+                               select_within_budget)
+from repro.core.vectordb import VectorDB
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# ELO invariants
+# ---------------------------------------------------------------------------
+
+@given(st.floats(500, 1500), st.floats(500, 1500))
+@settings(max_examples=50, deadline=None)
+def test_expected_score_symmetry(ra, rb):
+    e_ab = float(elo.expected_score(jnp.float32(ra), jnp.float32(rb)))
+    e_ba = float(elo.expected_score(jnp.float32(rb), jnp.float32(ra)))
+    assert abs(e_ab + e_ba - 1.0) < 1e-5
+    assert 0.0 <= e_ab <= 1.0
+
+
+@given(st.integers(2, 12), st.integers(1, 60), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_elo_conserves_total_rating(m, t, seed):
+    """Each update moves a and b by opposite amounts: sum is invariant."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, m, t), jnp.int32)
+    b = jnp.asarray((rng.integers(1, m, t) + np.asarray(a)) % m, jnp.int32)
+    s = jnp.asarray(rng.choice([0.0, 0.5, 1.0], t), jnp.float32)
+    ratings = elo.fit_global(m, a, b, s)
+    assert np.isclose(float(ratings.sum()), m * elo.DEFAULT_RATING, atol=1e-2)
+
+
+def test_elo_winner_gains():
+    r = elo.fit_global(2, jnp.array([0] * 10, jnp.int32),
+                       jnp.array([1] * 10, jnp.int32),
+                       jnp.ones(10, jnp.float32))
+    assert float(r[0]) > float(r[1])
+
+
+def test_elo_incremental_equals_full():
+    """fit(history) == fit(first half) + update(second half)."""
+    rng = np.random.default_rng(3)
+    m, t = 6, 50
+    a = jnp.asarray(rng.integers(0, m, t), jnp.int32)
+    b = jnp.asarray((np.asarray(a) + 1 + rng.integers(0, m - 1, t)) % m,
+                    jnp.int32)
+    s = jnp.asarray(rng.choice([0.0, 0.5, 1.0], t), jnp.float32)
+    full = elo.fit_global(m, a, b, s)
+    half = elo.fit_global(m, a[:25], b[:25], s[:25])
+    resumed = elo.update_global(half, a[25:], b[25:], s[25:])
+    np.testing.assert_allclose(np.asarray(full), np.asarray(resumed),
+                               rtol=1e-6)
+
+
+def test_local_elo_starts_from_global():
+    g = jnp.asarray([900.0, 1100.0, 1000.0])
+    # no valid records -> local == global for every query
+    a = jnp.zeros((4, 5), jnp.int32)
+    b = jnp.ones((4, 5), jnp.int32)
+    s = jnp.zeros((4, 5), jnp.float32)
+    v = jnp.zeros((4, 5), bool)
+    local = elo.local_elo(g, a, b, s, v)
+    np.testing.assert_allclose(np.asarray(local),
+                               np.tile(np.asarray(g), (4, 1)))
+
+
+# ---------------------------------------------------------------------------
+# budget selection properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 10), st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_budget_respected(m, q, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    costs = jnp.asarray(rng.uniform(1, 10, m), jnp.float32)
+    budget = jnp.asarray(rng.uniform(0.5, 12, q), jnp.float32)
+    choice, feasible = select_within_budget(scores, costs, budget)
+    choice = np.asarray(choice)
+    costs_n = np.asarray(costs)
+    bud = np.asarray(budget)
+    feas = np.asarray(feasible)
+    for i in range(q):
+        if feas[i].any():
+            assert costs_n[choice[i]] <= bud[i] + 1e-6
+            # and it is the best feasible score
+            masked = np.where(feas[i], np.asarray(scores)[i], -np.inf)
+            assert np.isclose(masked[choice[i]], masked.max())
+        else:
+            assert choice[i] == int(np.argmin(costs_n))  # cheapest fallback
+
+
+@given(st.floats(0, 1))
+@settings(max_examples=20, deadline=None)
+def test_combine_scores_convexity(p):
+    g = jnp.asarray([1000.0, 1200.0])
+    l = jnp.asarray([[900.0, 1300.0]])
+    c = np.asarray(combine_scores(g, l, p))
+    lo = np.minimum(np.asarray(g), np.asarray(l))
+    hi = np.maximum(np.asarray(g), np.asarray(l))
+    assert (c >= lo - 1e-4).all() and (c <= hi + 1e-4).all()
+
+
+# ---------------------------------------------------------------------------
+# vector DB
+# ---------------------------------------------------------------------------
+
+def test_vectordb_retrieves_self():
+    rng = np.random.default_rng(0)
+    db = VectorDB(dim=16, capacity=8, records_per_query=2)
+    embs = rng.normal(size=(10, 16)).astype(np.float32)  # forces growth
+    for i in range(10):
+        db.add(embs[i:i + 1], [i % 3], [(i + 1) % 3], [1.0], query_id=[i])
+    assert db.size == 10 and db.capacity >= 10
+    idx, scores, hit = db.query(embs[4:5], 3)
+    assert int(np.asarray(idx)[0, 0]) == 4      # nearest = itself
+    assert float(np.asarray(scores)[0, 0]) > 0.99
+
+
+def test_vectordb_groups_records_per_query():
+    db = VectorDB(dim=4, capacity=4, records_per_query=2)
+    e = np.ones((1, 4), np.float32)
+    for k in range(5):  # 5 records, same query -> record-axis growth
+        db.add(e, [0], [1], [1.0], query_id=[42])
+    assert db.size == 1
+    assert db.n_rec[0] == 5 and db.rcap >= 5
+    idx, _, hit = db.query(e, 1)
+    a, b, s, v = db.gather_feedback(idx, hit)
+    assert int(np.asarray(v).sum()) == 5
+
+
+def test_router_rank_is_permutation():
+    rng = np.random.default_rng(1)
+    r = EagleRouter([f"m{i}" for i in range(5)], np.arange(1, 6.0),
+                    EagleConfig(embed_dim=8), db_capacity=64)
+    emb = rng.normal(size=(6, 8)).astype(np.float32)
+    r.fit(emb, rng.integers(0, 5, 6), (rng.integers(0, 5, 6) + 1) % 5,
+          rng.choice([0., .5, 1.], 6), query_id=np.arange(6))
+    ranks = np.asarray(r.rank(emb[:3]))
+    for row in ranks:
+        assert sorted(row.tolist()) == list(range(5))
+
+
+def test_router_online_update_moves_ratings():
+    r = EagleRouter(["a", "b"], [1.0, 2.0], EagleConfig(embed_dim=4),
+                    db_capacity=64)
+    e = np.ones((20, 4), np.float32)
+    r.fit(e, [0] * 20, [1] * 20, [1.0] * 20, query_id=list(range(20)))
+    before = np.asarray(r.global_ratings).copy()
+    r.update(e[:5], [1] * 5, [0] * 5, [1.0] * 5,
+             query_id=[100 + i for i in range(5)])
+    after = np.asarray(r.global_ratings)
+    assert after[1] > before[1] and after[0] < before[0]

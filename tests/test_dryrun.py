@@ -1,0 +1,47 @@
+"""Dry-run pipeline integration: one real lower+compile on the production
+mesh via subprocess (the 512-placeholder-device XLA flag must be set
+before jax initializes, so this cannot run in-process)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "olmo-1b", "--shape", "decode_32k", "--mesh", "single",
+         "--out", str(tmp_path), "--force"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(
+        (tmp_path / "olmo-1b__decode_32k__single.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["flops_per_device"] > 0
+    assert rec["analytic"]["flops_global"] > 0
+    assert "all-reduce" in rec["collectives"] or \
+        rec["collectives"]["total_bytes"] >= 0
+
+
+def test_dryrun_results_complete():
+    """The committed sweep must cover all 80 combos with no errors."""
+    d = REPO / "results" / "dryrun"
+    if not d.exists():
+        pytest.skip("sweep results not present")
+    base = [json.loads(f.read_text()) for f in d.glob("*.json")
+            if len(f.stem.split("__")) == 3]  # untagged = baseline sweep
+    statuses = {}
+    for r in base:
+        statuses[r["status"]] = statuses.get(r["status"], 0) + 1
+    assert statuses.get("error", 0) == 0, statuses
+    assert statuses.get("ok", 0) >= 66
+    assert statuses.get("skipped", 0) >= 14  # long_500k by-design skips

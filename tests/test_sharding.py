@@ -1,0 +1,133 @@
+"""Sharding-rule unit tests (mesh stubbed: rules only read mesh.shape) and
+the scan-aware collective parser on synthetic HLO."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as SH
+from repro.configs import get_config
+from repro.launch.dryrun import collective_bytes
+from repro.models import transformer as T
+
+
+def stub_mesh(model=16, data=16, pod=None):
+    shape = {"data": data, "model": model}
+    names = ("data", "model")
+    if pod:
+        shape = {"pod": pod, **shape}
+        names = ("pod", "data", "model")
+    return types.SimpleNamespace(shape=shape, axis_names=names)
+
+
+def _specs_for(arch, mesh):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+    return cfg, shapes, SH.param_specs(cfg, mesh, shapes)
+
+
+def test_qwen_param_specs():
+    mesh = stub_mesh()
+    cfg, shapes, specs = _specs_for("qwen3-8b", mesh)
+    # stacked (L, d, H, hd) -> leading None, heads sharded
+    assert specs["blocks"]["attn"]["wq"] == P(None, None, "model", None)
+    # kv heads = 8, not divisible by 16 -> replicated
+    assert specs["blocks"]["attn"]["wk"] == P(None, None, None, None)
+    assert specs["blocks"]["ffn"]["w_gate"] == P(None, None, "model")
+    assert specs["blocks"]["ffn"]["w_down"] == P(None, "model", None)
+    assert specs["embed"] == P("model", None)
+    assert specs["lm_head"] == P(None, "model")
+
+
+def test_whisper_non_divisible_replicates():
+    mesh = stub_mesh()
+    cfg, shapes, specs = _specs_for("whisper-large-v3", mesh)
+    # 20 heads / 51866 vocab don't divide 16 -> replicate those dims
+    assert specs["blocks"]["attn"]["wq"] == P(None, None, None, None)
+    assert specs["embed"] == P(None, None)
+    # but d_ff = 5120 tensor-shards fine
+    assert specs["blocks"]["ffn"]["w_gate"] == P(None, None, "model")
+
+
+def test_moe_expert_sharding():
+    mesh = stub_mesh()
+    cfg, shapes, specs = _specs_for("deepseek-v3-671b", mesh)
+    assert specs["moe_blocks"]["ffn"]["w_gate"] == P(None, "model", None, None)
+    assert specs["moe_blocks"]["ffn"]["router"] == P(None, None, None)
+    assert specs["moe_blocks"]["ffn"]["shared"]["w_gate"] == P(None, None, "model")
+    # MLA projections shard on heads (128 % 16 == 0)
+    assert specs["moe_blocks"]["attn"]["w_uq"] == P(None, None, "model", None)
+
+
+def test_mamba_head_sharding():
+    mesh = stub_mesh()
+    cfg, shapes, specs = _specs_for("mamba2-780m", mesh)
+    assert specs["blocks"]["mamba"]["in_x"] == P(None, None, "model")
+    assert specs["blocks"]["mamba"]["in_B"] == P(None, None, None)
+    assert specs["blocks"]["mamba"]["A_log"] == P(None, "model")
+    assert specs["blocks"]["mamba"]["out_proj"] == P(None, "model", None)
+
+
+def test_batch_axes_divisibility():
+    mesh = stub_mesh(pod=2)
+    assert SH.batch_axes(mesh, 256) == ("pod", "data")
+    assert SH.batch_axes(mesh, 32) == ("pod", "data")
+    assert SH.batch_axes(mesh, 2) == ("pod",)
+    assert SH.batch_axes(mesh, 1) is None
+
+
+def test_cache_specs_seq_sharded():
+    mesh = stub_mesh()
+    cfg = get_config("qwen3-8b")
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 32768))
+    specs = SH.make_cache_specs(cfg, mesh, cache, 128)
+    assert specs["kv"]["k"] == P(None, "data", "model", None, None)
+
+
+def test_cache_specs_ssm():
+    mesh = stub_mesh()
+    cfg = get_config("mamba2-780m")
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 32768))
+    specs = SH.make_cache_specs(cfg, mesh, cache, 128)
+    assert specs["ssm"]["ssm"] == P(None, "data", "model", None, None)
+    assert specs["ssm"]["conv_x"] == P(None, "data", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# collective parser on synthetic HLO
+# ---------------------------------------------------------------------------
+
+_SYNTH_HLO = """\
+HloModule jit_x, entry_computation_layout={()->f32[]}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+  %p = (s32[], f32[8,4]) parameter(0)
+  %ar = f32[8,4]{1,0} all-reduce(%gte), to_apply=%add
+  ROOT %t = (s32[], f32[8,4]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,4])) -> pred[] {
+  %p = (s32[], f32[8,4]) parameter(0)
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%gte0, %c), direction=LT
+}
+
+ENTRY %main (p0: f32[8,4]) -> f32[] {
+  %w = (s32[], f32[8,4]) while(%init), condition=%cond, body=%body
+  ROOT %ar2 = f32[] all-reduce(%red), to_apply=%add
+}
+"""
+
+
+def test_collective_parser_trip_counts():
+    out = collective_bytes(_SYNTH_HLO)
+    # body all-reduce: 8*4*4 bytes * 7 trips + entry scalar 4 bytes
+    assert out["all-reduce"] == 8 * 4 * 4 * 7 + 4
+    assert out["all-reduce_count"] == 8
