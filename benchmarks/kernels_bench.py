@@ -34,6 +34,21 @@ def run(verbose=True):
     rows.append(("elo_local_64x160", us,
                  f"{64*160/us:.2f}updates/us"))
 
+    # fused routing retrieval: 64 queries x 16k-entry DB (d=1536, R=8,
+    # N=20, M=10) — similarity + top-k + gather + ELO replay, one dispatch
+    a = jnp.asarray(rng.integers(0, 10, (16384, 8)), jnp.int32)
+    b = jnp.asarray((np.asarray(a) + 1) % 10, jnp.int32)
+    o = jnp.asarray(rng.choice([0., .5, 1.], (16384, 8)), jnp.float32)
+    v = jnp.ones((16384, 8), bool)
+    init = jnp.full((10,), 1000.0, jnp.float32)
+    us, _ = C.timer(lambda: ops.retrieve_replay(
+        q, db, a, b, o, v, jnp.int32(16384), init, n=20))
+    # similarity panel + 160-step replay over (64,10) one-hot tiles;
+    # the panel matmul dominates
+    rr_flops = 2 * 64 * 16384 * 1536 + 160 * 64 * 10 * 8
+    rows.append(("retrieve_replay_64x16k", us,
+                 f"{rr_flops/us/1e3:.1f}GFLOP/s"))
+
     # flash attention prefill block: B1 S1024 H8 dh128
     qq = jnp.asarray(rng.normal(size=(1, 1024, 8, 128)), jnp.bfloat16)
     kk = jnp.asarray(rng.normal(size=(1, 1024, 8, 128)), jnp.bfloat16)

@@ -1,0 +1,115 @@
+"""End-to-end batch-routing latency: the fused route_batch pipeline vs
+the seed's host-hopping object path, over a RouterBench-style corpus.
+
+  PYTHONPATH=src python -m benchmarks.route_batch_bench [--smoke]
+
+The legacy path is reconstructed here exactly as the seed served it:
+VectorDB.query (device) -> gather_feedback (host fancy-indexing) ->
+local_elo (device) -> numpy score combine + budget selection (host) —
+four host/device boundary crossings per batch. The fused path is one
+jitted dispatch with a single (Q,) choice readout. ci.sh runs the
+--smoke variant so regressions in the fused path are visible per-PR.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import elo
+from repro.core.state import route_batch
+from repro.core.router import combine_scores
+
+
+def legacy_route(router, q, budgets):
+    """The seed implementation's serve() hot path, verbatim semantics."""
+    idx, _, hit = router.db.query(q, router.cfg.n_neighbors)
+    a, b, s, v = router.db.gather_feedback(idx, hit)   # host round-trip
+    local = elo.local_elo(router.global_ratings, a, b, s, v,
+                          k=router.cfg.k_factor)
+    scores = np.asarray(combine_scores(router.global_ratings, local,
+                                       router.cfg.p_global))
+    costs = np.asarray(router.costs)
+    feasible = costs[None, :] <= budgets[:, None]
+    masked = np.where(feasible, scores, -np.inf)
+    return np.where(feasible.any(1), masked.argmax(1),
+                    int(np.argmin(costs)))
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    n_per = 60 if smoke else C.N_PER_DATASET
+    repeat = 3 if smoke else 9
+    corpus, fb = C.build(seed=0, n_per_dataset=n_per)
+    router, _ = C.fit_eagle(corpus, fb)
+    kw = dict(p_global=router.cfg.p_global,
+              n_neighbors=router.cfg.n_neighbors, k=router.cfg.k_factor,
+              backend=router.cfg.backend, mode=router.mode,
+              init_rating=router.cfg.init_rating)
+    rows = []
+    for batch in (8, 64) if smoke else (1, 8, 64, 256):
+        rng = np.random.default_rng(batch)
+        q = corpus.embeddings[
+            rng.integers(0, len(corpus.embeddings), batch)]
+        budgets = rng.uniform(corpus.costs.min(), corpus.costs.max(),
+                              batch).astype(np.float32)
+        state = router.state
+        qd = jnp.asarray(q)
+        bd = jnp.asarray(budgets)
+
+        # warm both paths (jit compile + device snapshot) before timing
+        jax.block_until_ready(
+            route_batch(state, qd, bd, router.costs, **kw))
+        legacy_route(router, q, budgets)
+
+        us_fused, res = C.timer(
+            lambda: jax.block_until_ready(
+                route_batch(state, qd, bd, router.costs, **kw)),
+            repeat=repeat)
+        us_legacy, legacy_choice = C.timer(
+            lambda: legacy_route(router, q, budgets), repeat=repeat)
+        assert (np.asarray(res.choices) == legacy_choice).all(), \
+            "fused/legacy disagreement"
+        rows.append((f"route_batch_fused_q{batch}", us_fused,
+                     f"legacy={us_legacy:.0f}us"
+                     f"|speedup={us_legacy / us_fused:.2f}x"))
+
+    # incremental commit vs full re-upload (the online-update claim).
+    # The feedback append + global ELO fold happen OUTSIDE the timed
+    # region: this row measures only the dirty-row scatter that keeps
+    # commit() O(new records) instead of O(history).
+    import time as _time
+    fb2_emb = np.asarray(corpus.embeddings[:4], np.float32)
+    ts = []
+    for _ in range(repeat + 1):  # first iteration warms the jit
+        router.update(fb2_emb, [0, 1, 2, 3], [1, 2, 3, 0],
+                      [1.0, 0.0, 0.5, 1.0])
+        t0 = _time.perf_counter()
+        jax.block_until_ready(router.state.emb)
+        ts.append((_time.perf_counter() - t0) * 1e6)
+    us_commit = float(np.median(ts[1:]))
+    from repro.core.state import state_from_buffer
+    us_full, _ = C.timer(
+        lambda: jax.block_until_ready(
+            state_from_buffer(router.db, router.global_ratings)),
+        repeat=repeat)
+    rows.append(("state_commit_incremental", us_commit,
+                 f"full_upload={us_full:.0f}us"))
+
+    if verbose:
+        for n, us, d in rows:
+            print(f"[route_batch] {n},{us:.1f},{d}")
+    C.save_json("route_batch_bench.json",
+                [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus + few repeats (CI smoke)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -68,6 +68,11 @@ def main():
                  f"|global={c['global_only']['mean']:.3f}"
                  f"|local={c['local_only']['mean']:.3f}"))
 
+    section("Batch routing latency — fused route_batch vs legacy path")
+    from benchmarks import route_batch_bench
+    for n, us, d in route_batch_bench.run(smoke=args.quick):
+        rows.append((n, us, d))
+
     section("Kernel microbenchmarks")
     from benchmarks import kernels_bench
     for n, us, d in kernels_bench.run():

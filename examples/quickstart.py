@@ -6,6 +6,7 @@ pairwise feedback, and route budget-constrained queries.
 import numpy as np
 
 from repro.core.router import EagleConfig, EagleRouter
+from repro.core.state import route_batch
 from repro.data.routerbench import (budget_grid, evaluate_router,
                                     make_corpus, pairwise_feedback)
 
@@ -32,12 +33,26 @@ def main():
                        np.asarray(router.global_ratings)):
         print(f"  {name:26s} {r:7.1f}")
 
-    # 4. route some test queries at different budgets
+    # 4. route some test queries at different budgets — the entire hot
+    #    path (similarity -> top-k -> replay -> budget masking) is one
+    #    jitted dispatch over the device-resident RouterState
     q = corpus.embeddings[corpus.test_idx[:4]]
     for budget in (corpus.costs.min() * 1.5, corpus.costs.max()):
         picks = np.asarray(router.route(q, float(budget)))
         names = [corpus.model_names[i] for i in picks]
         print(f"budget {budget:6.1f}: {names}")
+
+    # 4b. or call the functional core directly (what ServingEngine
+    #     does). NOTE: router.state is valid until the router's next
+    #     write — re-read it after fit/update rather than caching it.
+    res = route_batch(router.state, q,
+                      np.full(len(q), float(corpus.costs.max()),
+                              np.float32),
+                      router.costs, p_global=router.cfg.p_global,
+                      n_neighbors=router.cfg.n_neighbors,
+                      k=router.cfg.k_factor)
+    print(f"route_batch choices {np.asarray(res.choices).tolist()}, "
+          f"top-1 neighbors {np.asarray(res.topk_idx)[:, 0].tolist()}")
 
     # 5. cost-quality curve + AUC on the test split
     res = evaluate_router(lambda e, b: router.route(e, b), corpus)

@@ -1,3 +1,9 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# core.state  — functional routing core: RouterState pytree + the fused
+#               route_batch pipeline (one jitted dispatch per batch)
+# core.router — thin stateful shell (EagleRouter + ablation variants)
+# core.elo    — ELO rating scans (global fit/update, local replay)
+# core.vectordb — host-side append buffer that commits into RouterState

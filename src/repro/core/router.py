@@ -13,8 +13,11 @@ Implements the full workflow of Fig. 1 / §2.2 of the paper:
      preference is appended to the DB + folded into Global — the
      training-free online update.
 
-Everything per-query is jittable; the router object holds online state
-(DB, global ratings) and exposes functional kernels underneath.
+EagleRouter is a thin stateful shell over the functional core in
+core/state.py: writes (fit/update/feedback) land in the host append
+buffer + global ratings and lazily commit into a device-resident
+RouterState; reads (scores/rank/route) are single jitted dispatches of
+route_batch/batch_scores over that state.
 """
 from __future__ import annotations
 
@@ -27,7 +30,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import elo
+from repro.core.state import (RouterState, RouteResult, batch_scores,
+                              combine_scores, commit, route_batch,
+                              select_within_budget)
 from repro.core.vectordb import VectorDB
+
+__all__ = ["EagleConfig", "EagleRouter", "GlobalOnlyRouter",
+           "LocalOnlyRouter", "combine_scores", "select_within_budget"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,34 +47,15 @@ class EagleConfig:
     k_factor: float = 32.0  # K: ELO sensitivity
     init_rating: float = elo.DEFAULT_RATING
     embed_dim: int = 256
-    backend: str = "reference"  # similarity kernel backend
-
-
-def combine_scores(global_r, local_r, p: float):
-    """Score(X) = P * Global(X) + (1-P) * Local(X).  global_r: (M,),
-    local_r: (Q, M) -> (Q, M)."""
-    return p * global_r[None, :] + (1.0 - p) * local_r
-
-
-def select_within_budget(scores, costs, budget):
-    """Highest-scoring model with cost <= budget; falls back to the
-    cheapest model when nothing fits (never refuse service).
-
-    scores: (Q, M); costs: (M,); budget: scalar or (Q,).
-    Returns (choice (Q,), feasible (Q, M))."""
-    budget = jnp.asarray(budget)
-    if budget.ndim == 0:
-        budget = budget[None]
-    feasible = costs[None, :] <= budget[:, None]
-    masked = jnp.where(feasible, scores, -jnp.inf)
-    choice = jnp.argmax(masked, axis=-1)
-    fallback = jnp.argmin(costs)
-    any_ok = feasible.any(axis=-1)
-    return jnp.where(any_ok, choice, fallback), feasible
+    backend: str = "reference"  # similarity/replay kernel backend
 
 
 class EagleRouter:
     """Online router over a fleet of models."""
+
+    #: route_batch scoring mode; the Appendix B ablation subclasses
+    #: override this (see core.state.MODES).
+    mode = "combined"
 
     def __init__(self, model_names: Sequence[str], costs,
                  cfg: EagleConfig = EagleConfig(), db_capacity: int = 4096):
@@ -77,8 +67,32 @@ class EagleRouter:
         self.global_ratings = jnp.full((self.n_models,), cfg.init_rating,
                                        jnp.float32)
         self.db = VectorDB(cfg.embed_dim, db_capacity, backend=cfg.backend)
+        self._state: Optional[RouterState] = None
+        self._stale = True
 
-    # -- state building ----------------------------------------------------
+    # -- device state --------------------------------------------------------
+    @property
+    def state(self) -> RouterState:
+        """Device-resident snapshot of the router; recommitted lazily
+        after writes (incremental: only dirty DB rows are uploaded).
+
+        The snapshot is only valid until the next write (fit/update/
+        feedback): the following commit DONATES its buffers. Re-read
+        this property after every write instead of holding a reference
+        across writes — on accelerator backends a held reference raises
+        a deleted-buffer error."""
+        if self._stale or self._state is None:
+            self._state = commit(self.db, self.global_ratings, self._state)
+            self._stale = False
+        return self._state
+
+    def _kw(self) -> Dict:
+        c = self.cfg
+        return dict(p_global=c.p_global, n_neighbors=c.n_neighbors,
+                    k=c.k_factor, backend=c.backend, mode=self.mode,
+                    init_rating=c.init_rating)
+
+    # -- state building ------------------------------------------------------
     def fit(self, embeddings, model_a, model_b, outcome,
             query_id=None) -> float:
         """Initialize from a feedback history. Returns wall seconds (the
@@ -91,6 +105,7 @@ class EagleRouter:
             jnp.asarray(outcome, jnp.float32),
             k=self.cfg.k_factor, init=self.cfg.init_rating)
         self.global_ratings.block_until_ready()
+        self._stale = True
         return time.perf_counter() - t0
 
     def update(self, embeddings, model_a, model_b, outcome,
@@ -103,29 +118,37 @@ class EagleRouter:
             jnp.asarray(model_b, jnp.int32), jnp.asarray(outcome, jnp.float32),
             k=self.cfg.k_factor)
         self.global_ratings.block_until_ready()
+        self._stale = True
         return time.perf_counter() - t0
 
-    # -- scoring -----------------------------------------------------------
-    def local_ratings(self, query_emb) -> jnp.ndarray:
-        idx, _, hit = self.db.query(query_emb, self.cfg.n_neighbors)
-        a, b, s, v = self.db.gather_feedback(idx, hit)
-        return elo.local_elo(self.global_ratings, a, b, s, v,
-                             k=self.cfg.k_factor)
-
+    # -- scoring (single-dispatch reads over the committed state) ------------
     def scores(self, query_emb) -> jnp.ndarray:
         """(Q, M) combined quality scores (higher = better predicted)."""
-        local = self.local_ratings(query_emb)
-        return combine_scores(self.global_ratings, local, self.cfg.p_global)
+        return batch_scores(self.state, query_emb, **self._kw())
 
     def rank(self, query_emb) -> jnp.ndarray:
         """(Q, M) model indices, best first."""
         return jnp.argsort(-self.scores(query_emb), axis=-1)
 
+    def route_result(self, query_emb, budget) -> RouteResult:
+        """Full fused routing step: (choices, scores, topk_idx)."""
+        return route_batch(self.state, query_emb, budget, self.costs,
+                           **self._kw())
+
     def route(self, query_emb, budget) -> jnp.ndarray:
         """(Q,) selected model index per query under the budget."""
-        choice, _ = select_within_budget(self.scores(query_emb), self.costs,
-                                         budget)
-        return choice
+        return self.route_result(query_emb, budget).choices
+
+    def local_ratings(self, query_emb) -> jnp.ndarray:
+        """(Q, M) Eagle-Local ratings (replay from the global prior)."""
+        from repro.kernels import ops as KOPS
+        s = self.state
+        q = jnp.atleast_2d(jnp.asarray(query_emb, jnp.float32))
+        local, _, _ = KOPS.retrieve_replay(
+            q, s.emb, s.model_a, s.model_b, s.outcome, s.valid, s.size,
+            s.global_ratings, n=min(self.cfg.n_neighbors, s.capacity),
+            k=self.cfg.k_factor, backend=self.cfg.backend)
+        return local
 
     # -- feedback loop (workflow step 5) ------------------------------------
     def feedback(self, query_emb, chosen, opponent, outcome):
@@ -138,18 +161,10 @@ class EagleRouter:
 # ---------------------------------------------------------------------------
 
 class GlobalOnlyRouter(EagleRouter):
-    """Eagle-Global: ignores the local module (P=1)."""
-
-    def scores(self, query_emb):
-        q = jnp.atleast_2d(query_emb).shape[0]
-        return jnp.broadcast_to(self.global_ratings, (q, self.n_models))
+    """Eagle-Global: ignores the local module (P=1, retrieval skipped)."""
+    mode = "global"
 
 
 class LocalOnlyRouter(EagleRouter):
     """Eagle-Local only: local replay from a FLAT prior (no global info)."""
-
-    def scores(self, query_emb):
-        idx, _, hit = self.db.query(query_emb, self.cfg.n_neighbors)
-        a, b, s, v = self.db.gather_feedback(idx, hit)
-        flat = jnp.full((self.n_models,), self.cfg.init_rating, jnp.float32)
-        return elo.local_elo(flat, a, b, s, v, k=self.cfg.k_factor)
+    mode = "local"

@@ -1,0 +1,233 @@
+"""Functional, device-resident routing core (DESIGN.md §2).
+
+RouterState is an immutable pytree holding everything the routing hot
+path needs on device: the standing global ELO ratings plus the vector-DB
+panels (embeddings + grouped pairwise feedback). Per-batch routing is ONE
+jitted dispatch over this state:
+
+    route_batch(state, query_embs, budgets, costs)
+      = similarity -> top-k -> record gather -> local ELO replay
+        -> score combine -> budget masking
+
+with zero host transfers between the similarity panel and the final model
+selection (the legacy object path crossed the host/device boundary four
+times per batch). The VectorDB stays a host-side append buffer — appends
+must cost microseconds — and syncs into a RouterState via commit(), which
+scatters only the rows touched since the last commit into the previous
+state's DONATED device buffers (O(new records) upload, no realloc).
+
+EagleRouter (core/router.py) is a thin stateful shell over these
+functions; ServingEngine and the benchmarks call them directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elo
+from repro.kernels import ops as KOPS
+
+#: route_batch scoring modes (paper Appendix B ablations).
+MODES = ("combined", "global", "local")
+
+
+# ---------------------------------------------------------------------------
+# score combination + budget selection (pure functions, shared with the
+# baseline routers)
+# ---------------------------------------------------------------------------
+
+def combine_scores(global_r, local_r, p: float):
+    """Score(X) = P * Global(X) + (1-P) * Local(X).  global_r: (M,),
+    local_r: (Q, M) -> (Q, M)."""
+    return p * global_r[None, :] + (1.0 - p) * local_r
+
+
+def select_within_budget(scores, costs, budget):
+    """Highest-scoring model with cost <= budget; falls back to the
+    cheapest model when nothing fits (never refuse service).
+
+    scores: (Q, M); costs: (M,); budget: scalar or (Q,).
+    Returns (choice (Q,), feasible (Q, M))."""
+    budget = jnp.asarray(budget)
+    if budget.ndim == 0:
+        budget = budget[None]
+    feasible = costs[None, :] <= budget[:, None]
+    masked = jnp.where(feasible, scores, -jnp.inf)
+    choice = jnp.argmax(masked, axis=-1)
+    fallback = jnp.argmin(costs)
+    any_ok = feasible.any(axis=-1)
+    return jnp.where(any_ok, choice, fallback), feasible
+
+
+# ---------------------------------------------------------------------------
+# RouterState pytree
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["global_ratings", "emb", "model_a", "model_b",
+                      "outcome", "valid", "size"],
+         meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class RouterState:
+    """Immutable device snapshot of the router: passes through jit/vmap
+    as a pytree; capacities are encoded in the array shapes."""
+    global_ratings: jax.Array   # (M,)  standing Eagle-Global ratings
+    emb: jax.Array              # (C, D) L2-normalized prompt embeddings
+    model_a: jax.Array          # (C, R) int32 pairwise records
+    model_b: jax.Array          # (C, R) int32
+    outcome: jax.Array          # (C, R) float32 S for model_a
+    valid: jax.Array            # (C, R) bool record mask
+    size: jax.Array             # ()    int32 live prompt rows
+
+    @property
+    def n_models(self) -> int:
+        return self.global_ratings.shape[-1]
+
+    @property
+    def capacity(self) -> int:
+        return self.emb.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.emb.shape[1]
+
+    @property
+    def records_per_query(self) -> int:
+        return self.model_a.shape[1]
+
+
+def init_state(n_models: int, dim: int, capacity: int = 4096,
+               records_per_query: int = 8,
+               init_rating: float = elo.DEFAULT_RATING) -> RouterState:
+    """Empty device state (no history)."""
+    return RouterState(
+        global_ratings=jnp.full((n_models,), init_rating, jnp.float32),
+        emb=jnp.zeros((capacity, dim), jnp.float32),
+        model_a=jnp.zeros((capacity, records_per_query), jnp.int32),
+        model_b=jnp.zeros((capacity, records_per_query), jnp.int32),
+        outcome=jnp.zeros((capacity, records_per_query), jnp.float32),
+        valid=jnp.zeros((capacity, records_per_query), bool),
+        size=jnp.int32(0))
+
+
+def state_from_buffer(db, global_ratings) -> RouterState:
+    """Full upload of a host append buffer (VectorDB) to device."""
+    return RouterState(
+        global_ratings=jnp.asarray(global_ratings, jnp.float32),
+        emb=jnp.asarray(db.emb),
+        model_a=jnp.asarray(db.model_a),
+        model_b=jnp.asarray(db.model_b),
+        outcome=jnp.asarray(db.outcome),
+        valid=jnp.asarray(db.valid),
+        size=jnp.int32(db.size))
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+def _scatter_rows(emb, model_a, model_b, outcome, valid, rows,
+                  emb_rows, a_rows, b_rows, o_rows, v_rows):
+    """Write the dirty rows into the donated previous-state buffers."""
+    return (emb.at[rows].set(emb_rows),
+            model_a.at[rows].set(a_rows),
+            model_b.at[rows].set(b_rows),
+            outcome.at[rows].set(o_rows),
+            valid.at[rows].set(v_rows))
+
+
+def commit(db, global_ratings,
+           prev: Optional[RouterState] = None) -> RouterState:
+    """Sync the host append buffer into a device RouterState.
+
+    With a previous state of matching shape, only the rows touched since
+    the last commit are uploaded and scattered into `prev`'s donated
+    buffers (the 100-200x incremental-update claim depends on this being
+    O(new records), not O(history)). `prev` MUST NOT be used after this
+    call — its buffers are donated. Row counts are padded to power-of-two
+    buckets so the scatter compiles once per bucket."""
+    rows = db.drain_dirty()
+    if (prev is None or prev.emb.shape != db.emb.shape
+            or prev.model_a.shape != db.model_a.shape):
+        return state_from_buffer(db, global_ratings)
+    g = jnp.asarray(global_ratings, jnp.float32)
+    if rows.size == 0:
+        return dataclasses.replace(prev, global_ratings=g,
+                                   size=jnp.int32(db.size))
+    bucket = elo._pad_bucket(rows.size)
+    # pad by repeating the first dirty row: duplicate scatter writes of
+    # identical content are idempotent
+    rows = np.concatenate([rows, np.full(bucket - rows.size, rows[0],
+                                         rows.dtype)])
+    emb, a, b, o, v = _scatter_rows(
+        prev.emb, prev.model_a, prev.model_b, prev.outcome, prev.valid,
+        jnp.asarray(rows), jnp.asarray(db.emb[rows]),
+        jnp.asarray(db.model_a[rows]), jnp.asarray(db.model_b[rows]),
+        jnp.asarray(db.outcome[rows]), jnp.asarray(db.valid[rows]))
+    return RouterState(global_ratings=g, emb=emb, model_a=a, model_b=b,
+                       outcome=o, valid=v, size=jnp.int32(db.size))
+
+
+# ---------------------------------------------------------------------------
+# the fused routing pipeline
+# ---------------------------------------------------------------------------
+
+class RouteResult(NamedTuple):
+    choices: jax.Array    # (Q,)   selected model per query
+    scores: jax.Array     # (Q, M) combined quality scores
+    topk_idx: jax.Array   # (Q, N) retrieved prompt rows (-1 in global mode)
+
+
+def _scores(state: RouterState, q, p_global, n_neighbors, k, backend,
+            mode, init_rating):
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+    nq = q.shape[0]
+    m = state.n_models
+    n = min(n_neighbors, state.capacity)
+    if mode == "global":
+        # Eagle-Global ablation: no retrieval at all
+        scores = jnp.broadcast_to(state.global_ratings, (nq, m))
+        return scores, jnp.full((nq, n), -1, jnp.int32)
+    if mode == "local":
+        init = jnp.full((m,), jnp.float32(init_rating))  # flat prior
+    else:
+        init = state.global_ratings
+    local, top_i, _ = KOPS.retrieve_replay(
+        q, state.emb, state.model_a, state.model_b, state.outcome,
+        state.valid, state.size, init, n=n, k=k, backend=backend)
+    if mode == "local":
+        return local, top_i
+    return combine_scores(state.global_ratings, local, p_global), top_i
+
+
+@partial(jax.jit,
+         static_argnames=("n_neighbors", "k", "backend", "mode"))
+def batch_scores(state: RouterState, query_embs, *, p_global: float = 0.5,
+                 n_neighbors: int = 20, k: float = 32.0,
+                 backend: str = "reference", mode: str = "combined",
+                 init_rating: float = elo.DEFAULT_RATING):
+    """(Q, M) combined quality scores, one jitted dispatch."""
+    return _scores(state, query_embs, p_global, n_neighbors, k, backend,
+                   mode, init_rating)[0]
+
+
+@partial(jax.jit,
+         static_argnames=("n_neighbors", "k", "backend", "mode"))
+def route_batch(state: RouterState, query_embs, budgets, costs, *,
+                p_global: float = 0.5, n_neighbors: int = 20,
+                k: float = 32.0, backend: str = "reference",
+                mode: str = "combined",
+                init_rating: float = elo.DEFAULT_RATING) -> RouteResult:
+    """Route a batch of queries under budgets: the entire hot path —
+    similarity, top-k, feedback gather, local ELO replay, score
+    combination, budget masking — fused into a single device dispatch."""
+    scores, top_i = _scores(state, query_embs, p_global, n_neighbors, k,
+                            backend, mode, init_rating)
+    choices, _ = select_within_budget(scores, jnp.asarray(costs,
+                                                          jnp.float32),
+                                      budgets)
+    return RouteResult(choices, scores, top_i)

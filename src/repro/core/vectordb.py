@@ -1,15 +1,19 @@
-"""Vector database: prompt embeddings + grouped pairwise feedback.
+"""Vector database: host-side append buffer for prompt embeddings +
+grouped pairwise feedback.
 
 The retrieval unit is the PROMPT (paper §2.2: "retrieve the N nearest
 neighbors ... using the prompt embedding vector"): each stored prompt
 carries all pairwise feedback collected for it, and Eagle-Local replays
 the FULL feedback of the N retrieved prompts.
 
-Storage lives in host numpy (appends are the online hot path and must cost
-microseconds, not device round-trips); retrieval snapshots to device
-lazily — the snapshot invalidates on write and re-uploads at the next
-query, amortized across the query stream. On TPU the scores panel is the
-similarity_topk Pallas kernel; this container defaults to its jnp oracle.
+Storage lives in host numpy (appends are the online hot path and must
+cost microseconds, not device round-trips). Retrieval itself runs on
+device against a RouterState (core/state.py): the buffer tracks which
+rows were touched since the last sync and `state.commit()` scatters just
+those rows into the device-resident state (donated buffers, O(new
+records)). The `query`/`gather_feedback` methods below are the LEGACY
+object-path retrieval — kept for equivalence tests against the fused
+route_batch pipeline, no longer on the serving hot path.
 """
 from __future__ import annotations
 
@@ -37,6 +41,7 @@ class VectorDB:
         self._alloc(capacity, records_per_query)
         self._row_of: Dict[int, int] = {}
         self._device: Optional[Tuple] = None  # cached device snapshot
+        self._dirty: set = set()           # rows touched since last commit
 
     def _alloc(self, cq, r):
         self.emb = np.zeros((cq, self.dim), np.float32)
@@ -102,7 +107,18 @@ class VectorDB:
             self.outcome[row, slot] = outcome[i]
             self.valid[row, slot] = True
             self.n_rec[row] += 1
+            self._dirty.add(row)
         self._device = None  # invalidate the device snapshot
+
+    def drain_dirty(self) -> np.ndarray:
+        """Rows touched since the last drain (sorted), then clear. The
+        commit() path uploads exactly these rows; a buffer realloc
+        (_grow) changes the array shapes, which commit() detects and
+        answers with a full re-upload instead."""
+        rows = np.fromiter(sorted(self._dirty), np.int32,
+                           count=len(self._dirty))
+        self._dirty.clear()
+        return rows
 
     def _snapshot(self):
         if self._device is None:
@@ -110,7 +126,8 @@ class VectorDB:
         return self._device
 
     def query(self, q, n: int):
-        """Top-n prompts. Returns (idx (Q,n), scores (Q,n), hit (Q,n))."""
+        """LEGACY object-path retrieval (see module docstring).
+        Top-n prompts. Returns (idx (Q,n), scores (Q,n), hit (Q,n))."""
         (emb_dev,) = self._snapshot()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
         q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-9)
@@ -121,8 +138,11 @@ class VectorDB:
         return top_i, top_s, jnp.isfinite(top_s)
 
     def gather_feedback(self, idx, hit):
-        """idx: (Q,N) prompt rows -> flattened (Q, N*R) neighbor records
-        (model_a, model_b, outcome, valid) for the local ELO replay.
+        """LEGACY host-side record gather (pulls top-k indices back to
+        host numpy for fancy-indexing; the fused pipeline keeps this on
+        device via kernels.ref.gather_records). idx: (Q,N) prompt rows
+        -> flattened (Q, N*R) neighbor records (model_a, model_b,
+        outcome, valid) for the local ELO replay.
 
         Replay order is FARTHEST neighbor first: ELO is recency-weighted
         (later updates dominate the final ratings), so the most similar

@@ -18,6 +18,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.elo_scan import elo_scan_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.retrieve_replay import retrieve_replay_pallas
 from repro.kernels.similarity_topk import similarity_pallas
 
 
@@ -51,6 +52,19 @@ def elo_scan(ratings, a_idx, b_idx, outcome, valid, *, k: float = 32.0,
     return _dispatch(backend, partial(ref.elo_scan_ref, k=k),
                      partial(elo_scan_pallas, k=k),
                      ratings, a_idx, b_idx, outcome, valid)
+
+
+@partial(jax.jit, static_argnames=("backend", "n", "k"))
+def retrieve_replay(q, emb, model_a, model_b, outcome, valid, size,
+                    init_ratings, *, n: int, k: float = 32.0,
+                    backend: str = "reference"):
+    """Fused routing retrieval: similarity panel + masked top-k + device
+    record gather + batched ELO replay, one dispatch, no host transfers.
+    Returns (local_ratings (Q,M), topk_idx (Q,n), topk_scores (Q,n))."""
+    return _dispatch(backend, partial(ref.retrieve_replay_ref, n=n, k=k),
+                     partial(retrieve_replay_pallas, n=n, k=k),
+                     q, emb, model_a, model_b, outcome, valid, size,
+                     init_ratings)
 
 
 @partial(jax.jit, static_argnames=("backend", "causal", "window"))

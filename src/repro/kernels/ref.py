@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -28,6 +30,78 @@ def elo_scan_ref(ratings, a_idx, b_idx, outcome, valid, k=32.0):
         one_b = jax.nn.one_hot(b, m, dtype=jnp.float32)
         r = r + delta[:, None] * (one_a - one_b)
     return r
+
+
+def gather_records(model_a, model_b, outcome, valid, idx, hit):
+    """Device-side neighbor-record gather: (Q,N) prompt rows -> flattened
+    (Q, N*R) records, entirely in jnp (no host fancy-indexing).
+
+    Replay order is FARTHEST neighbor first: ELO is recency-weighted
+    (later updates dominate the final ratings), so the most similar
+    prompts are replayed last to carry the most influence."""
+    idx = jnp.flip(idx, axis=1)
+    hit = jnp.flip(hit, axis=1)
+    nq = idx.shape[0]
+    a = jnp.take(model_a, idx, axis=0).reshape(nq, -1)
+    b = jnp.take(model_b, idx, axis=0).reshape(nq, -1)
+    s = jnp.take(outcome, idx, axis=0).reshape(nq, -1)
+    v = (jnp.take(valid, idx, axis=0) & hit[..., None]).reshape(nq, -1)
+    return a, b, s, v
+
+
+def elo_replay_ref(ratings, a_idx, b_idx, outcome, valid, k=32.0):
+    """lax.scan formulation of elo_scan_ref (identical math, O(1) trace
+    size) — the replay stage of the fused retrieve_replay reference.
+
+    Deliberately NOT delegated to core.elo.elo_scan: kernels/ is the
+    leaf layer (core imports kernels, never the reverse), and this
+    module is the self-contained ground truth the Pallas bodies are
+    validated against. test_elo_scan_kernel_matches_core_scan pins the
+    kernel to core's production scan, so the copies cannot drift
+    unnoticed."""
+
+    def step(r, rec):
+        a, b, s, v = rec
+        m = r.shape[-1]
+        r_a = jnp.take_along_axis(r, a[:, None], 1)[:, 0]
+        r_b = jnp.take_along_axis(r, b[:, None], 1)[:, 0]
+        e_a = 1.0 / (1.0 + 10.0 ** ((r_b - r_a) / 400.0))
+        delta = k * (s - e_a) * v.astype(jnp.float32)
+        one_a = jax.nn.one_hot(a, m, dtype=jnp.float32)
+        one_b = jax.nn.one_hot(b, m, dtype=jnp.float32)
+        return r + delta[:, None] * (one_a - one_b), None
+
+    out, _ = jax.lax.scan(step, ratings.astype(jnp.float32),
+                          (a_idx.T, b_idx.T, outcome.T, valid.T))
+    return out
+
+
+def retrieve_replay_pipeline(similarity_fn, replay_fn, q, emb, model_a,
+                             model_b, outcome, valid, size, init_ratings,
+                             *, n):
+    """The fused retrieval chain — similarity panel -> live-row masked
+    top-k -> farthest-first record gather -> replay from the broadcast
+    prior — with the stage implementations injected, so the reference
+    and Pallas backends share ONE copy of the glue and cannot drift."""
+    scores = similarity_fn(q, emb)
+    live = jnp.arange(emb.shape[0]) < size
+    scores = jnp.where(live[None, :], scores, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(scores, n)
+    hit = jnp.isfinite(top_s)
+    a, b, s, v = gather_records(model_a, model_b, outcome, valid, top_i, hit)
+    init = jnp.broadcast_to(init_ratings, (q.shape[0], init_ratings.shape[-1]))
+    local = replay_fn(init, a, b, s, v)
+    return local, top_i, top_s
+
+
+def retrieve_replay_ref(q, emb, model_a, model_b, outcome, valid, size,
+                        init_ratings, *, n, k=32.0):
+    """Fused routing retrieval oracle: similarity panel -> masked top-k ->
+    device gather -> batched ELO replay. Returns (local (Q,M), topk_idx,
+    topk_scores)."""
+    return retrieve_replay_pipeline(
+        similarity_ref, partial(elo_replay_ref, k=k), q, emb, model_a,
+        model_b, outcome, valid, size, init_ratings, n=n)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0):

@@ -1,0 +1,46 @@
+"""Fused routing retrieval: the whole Eagle-Local hot path as one
+device-resident chain (DESIGN.md §3).
+
+Chains the similarity_topk and elo_scan Pallas kernels — similarity panel
+(MXU) -> masked top-k -> neighbor-record gather (jnp.take, on device) ->
+batched ELO replay (VPU one-hot masked adds) — without materializing any
+intermediate on host. The only host interaction of a routing step is the
+final (Q,) choice readout by the caller; everything between the query
+embeddings and the model scores stays in HBM/VMEM.
+
+The top-k + gather glue is ordinary jnp (data-dependent sorts and
+gathers map poorly onto the VPU — see similarity_topk.py); under jit the
+whole chain lowers into a single XLA computation between the two Pallas
+calls, so "fused" here means one dispatch and zero host round-trips, not
+one monolithic kernel body.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+
+from repro.kernels.elo_scan import elo_scan_pallas
+from repro.kernels.ref import retrieve_replay_pipeline
+from repro.kernels.similarity_topk import similarity_pallas
+
+
+def retrieve_replay_pallas(q, emb, model_a, model_b, outcome, valid, size,
+                           init_ratings, *, n, k: float = 32.0,
+                           interpret: bool = False):
+    """q: (Q,D); emb: (C,D); records: (C,R); size: () live-row count;
+    init_ratings: (M,) or (Q,M) replay starting point.
+
+    Returns (local_ratings (Q,M), topk_idx (Q,n), topk_scores (Q,n));
+    topk rows past `size` score -inf (misses), and their records are
+    masked out of the replay. The top-k/gather glue is shared with the
+    reference backend (retrieve_replay_pipeline)."""
+
+    def replay(init, a, b, s, v):
+        return elo_scan_pallas(init.astype(jnp.float32), a, b,
+                               s.astype(jnp.float32), v, k=k,
+                               interpret=interpret)
+
+    return retrieve_replay_pipeline(
+        partial(similarity_pallas, interpret=interpret), replay, q, emb,
+        model_a, model_b, outcome, valid, size, init_ratings, n=n)

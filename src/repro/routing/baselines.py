@@ -26,13 +26,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.router import select_within_budget
+from repro.core.state import select_within_budget
 from repro.kernels import ops as KOPS
 from repro.training.optim import AdamW
 
 
 class BaselineRouter:
-    """Shared budget-selection logic."""
+    """Shared budget-selection logic (the same jitted
+    select_within_budget the fused Eagle pipeline uses)."""
 
     def __init__(self, costs):
         self.costs = jnp.asarray(costs, jnp.float32)

@@ -101,13 +101,15 @@ class ServingEngine:
         t0 = time.perf_counter()
         embs = np.stack([r.embedding for r in requests])
         budgets = np.asarray([r.budget for r in requests], np.float32)
-        scores = np.asarray(self.router.scores(embs))
-        feasible = np.asarray(self.router.costs)[None, :] <= budgets[:, None]
-        masked = np.where(feasible, scores, -np.inf)
-        choices = np.where(feasible.any(1), masked.argmax(1),
-                           int(np.argmin(np.asarray(self.router.costs))))
+        # ②/③ the whole routing hot path (similarity -> replay -> score
+        # combine -> budget masking) is ONE jitted dispatch; the single
+        # host readout is the final per-request choice
+        choices = np.asarray(self.router.route_result(embs, budgets).choices)
+        route_dt = time.perf_counter() - t0
 
-        # ④ group by chosen model, pad to a batch, generate
+        # ④ group by chosen model, pad to a batch, generate. Each group
+        # is timed separately: a request's latency is routing + its OWN
+        # group's generation, not the sum of every earlier group's.
         responses: List[Response] = [None] * len(requests)  # type: ignore
         for mi, name in enumerate(self.router.model_names):
             sel = np.nonzero(choices == mi)[0]
@@ -119,8 +121,9 @@ class ServingEngine:
                 t = requests[i].tokens
                 toks[row, :len(t)] = t
             max_new = max(requests[i].max_new_tokens for i in sel)
+            tg = time.perf_counter()
             gen = self.fleet[name].generate(toks, max_new)
-            dt = time.perf_counter() - t0
+            dt = route_dt + (time.perf_counter() - tg)
             for row, i in enumerate(sel):
                 responses[i] = Response(requests[i].rid, name,
                                         gen[row, :requests[i].max_new_tokens],

@@ -1,0 +1,26 @@
+"""Optional-hypothesis shim: in environments without hypothesis the
+@given property tests skip individually while every plain test in the
+module still collects and runs (a module-level importorskip would
+silently disable them all)."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `st`: strategy expressions in @given(...) are
+        evaluated at decoration time, so they must not raise."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda f: f
