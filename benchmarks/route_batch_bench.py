@@ -2,17 +2,30 @@
 the seed's host-hopping object path, over a RouterBench-style corpus.
 
   PYTHONPATH=src python -m benchmarks.route_batch_bench [--smoke]
+  PYTHONPATH=src python -m benchmarks.route_batch_bench \
+      [--smoke] --ragged [--assert-steady-state]
 
 The legacy path is reconstructed here exactly as the seed served it:
 VectorDB.query (device) -> gather_feedback (host fancy-indexing) ->
 local_elo (device) -> numpy score combine + budget selection (host) —
 four host/device boundary crossings per batch. The fused path is one
-jitted dispatch with a single (Q,) choice readout. ci.sh runs the
---smoke variant so regressions in the fused path are visible per-PR.
+jitted dispatch with a single (Q,) choice readout.
+
+--ragged runs the steady-state serving scenario instead: a long loop of
+RANDOM batch sizes through the bucketed dispatch cache over a
+double-buffered state, with periodic feedback + commits — the shape of
+real online traffic. It reports p50/p99 step latency and the EXACT
+number of XLA compilations observed after warmup (jax.monitoring), and
+writes BENCH_route.json at the repo root. With --assert-steady-state it
+exits non-zero if any post-warmup step compiled — the CI gate ci.sh
+runs per-PR.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +33,12 @@ import numpy as np
 
 from benchmarks import common as C
 from repro.core import elo
-from repro.core.state import route_batch
+from repro.core.dispatch import CompileCounter, RouteDispatcher
+from repro.core.state import DoubleBuffer, route_batch
 from repro.core.router import combine_scores
+
+#: committed artifact (results/ is gitignored; this one is the record)
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_route.json"
 
 
 def legacy_route(router, q, budgets):
@@ -107,9 +124,105 @@ def run(verbose: bool = True, smoke: bool = False):
     return rows
 
 
+def run_ragged(verbose: bool = True, smoke: bool = False,
+               assert_steady_state: bool = False):
+    """Steady-state serving scenario: ragged traffic (random batch size
+    per step) through the bucketed dispatch cache over a double-buffered
+    state, with periodic feedback + commits. After warmup the loop must
+    trigger ZERO XLA compilations (ISSUE acceptance criterion)."""
+    n_steps = 60 if smoke else 500
+    max_batch = 64 if smoke else 256
+    commit_every = 20
+    n_per = 60 if smoke else C.N_PER_DATASET
+    corpus, fb = C.build(seed=0, n_per_dataset=n_per)
+    router, _ = C.fit_eagle(corpus, fb)
+    rng = np.random.default_rng(1)
+    embs = np.asarray(corpus.embeddings, np.float32)
+    bud_lo, bud_hi = float(corpus.costs.min()), float(corpus.costs.max())
+
+    dispatch = RouteDispatcher.for_router(router, max_bucket=max_batch)
+    dbuf = DoubleBuffer(router.db, router.global_ratings)
+    # the loop appends rows; make sure it cannot outgrow the buffer
+    # mid-run (a _grow() realloc is a new shape signature = recompiles)
+    n_commits = n_steps // commit_every
+    assert router.db.size + 4 * (n_commits + 2) <= router.db.capacity
+
+    def feedback_cycle(qid_base):
+        """One real online update: 4 pairwise records on fresh prompts
+        + a double-buffer commit."""
+        i = rng.integers(0, len(embs), 4)
+        router.update(embs[i], [0, 1, 2, 3], [1, 2, 3, 0],
+                      [1.0, 0.0, 0.5, 1.0],
+                      query_id=[qid_base + j for j in range(4)])
+        dbuf.commit(router.global_ratings)
+
+    # ---- warmup: the bucket ladder + one real feedback/commit cycle
+    # per buffer (bakes the 64-row scatter and update_global folds too)
+    t0 = time.perf_counter()
+    warm_routes = dispatch.warmup(dbuf.front)
+    for i in range(2):
+        feedback_cycle(10_000_000 + 4 * i)
+    warm_s = time.perf_counter() - t0
+
+    # ---- steady-state loop
+    lat_us = []
+    qid = 20_000_000
+    with CompileCounter() as cc:
+        for step in range(n_steps):
+            bs = int(rng.integers(1, max_batch + 1))
+            i = rng.integers(0, len(embs), bs)
+            budgets = rng.uniform(bud_lo, bud_hi, bs).astype(np.float32)
+            t0 = time.perf_counter()
+            dispatch.route(dbuf.front, embs[i], budgets)
+            lat_us.append((time.perf_counter() - t0) * 1e6)
+            if (step + 1) % commit_every == 0:
+                feedback_cycle(qid)
+                qid += 4
+    compiles = cc.delta()
+
+    p50, p90, p99 = (float(np.percentile(lat_us, p)) for p in (50, 90, 99))
+    payload = {
+        "scenario": "ragged_steady_state",
+        "smoke": smoke,
+        "steps": n_steps,
+        "max_batch": max_batch,
+        "commit_every": commit_every,
+        "route_p50_us": p50,
+        "route_p90_us": p90,
+        "route_p99_us": p99,
+        "warmup_s": warm_s,
+        "warmup_route_executables": warm_routes,
+        "post_warmup_xla_compiles": compiles,
+        "dispatch": {k: v for k, v in dispatch.cache_stats().items()
+                     if k != "keys"},
+    }
+    BENCH_JSON.write_text(json.dumps(payload, indent=1, default=float))
+    C.save_json("route_ragged_bench.json", payload)
+    if verbose:
+        print(f"[route_ragged] steps={n_steps} max_batch={max_batch} "
+              f"p50={p50:.0f}us p90={p90:.0f}us p99={p99:.0f}us "
+              f"warmup={warm_s:.1f}s ({warm_routes} executables) "
+              f"post_warmup_compiles={compiles}")
+    if assert_steady_state and compiles != 0:
+        raise SystemExit(
+            f"steady-state violation: {compiles} XLA compilation(s) "
+            f"after warmup (expected 0) — dispatch stats: "
+            f"{dispatch.cache_stats()}")
+    return payload
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small corpus + few repeats (CI smoke)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="steady-state ragged-traffic scenario")
+    ap.add_argument("--assert-steady-state", action="store_true",
+                    help="with --ragged: fail if any post-warmup step "
+                         "triggered an XLA compilation")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    if args.ragged:
+        run_ragged(smoke=args.smoke,
+                   assert_steady_state=args.assert_steady_state)
+    else:
+        run(smoke=args.smoke)

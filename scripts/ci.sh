@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
-# Per-PR gate: full test suite + the fused-routing smoke benchmark.
+# Per-PR gate: full test suite + the fused-routing smoke benchmark +
+# the steady-state serving gate.
 #
 # The suite runs WITHOUT -x (ROADMAP's tier-1 uses -x for interactive
-# runs): the seed carries known kernel/sharding failures (see ROADMAP
-# open items), and halting at the first of those would skip the fused
-# route_batch tests entirely. Compare the FAILED set against the
-# baseline recorded in CHANGES.md; the benchmark runs even when tests
-# fail so perf is visible either way. Exit code is the pytest result.
+# runs) so a single failure doesn't hide the rest of the signal; the
+# benchmarks run even when tests fail so perf is visible either way.
+#
+# The ragged gate is the hard steady-state guarantee: after warming the
+# dispatch cache's bucket ladder, NO step of a ragged-traffic serving
+# loop (random batch sizes, periodic feedback commits) may trigger an
+# XLA compilation. --assert-steady-state exits non-zero on the first
+# post-warmup compile (exact count via jax.monitoring).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -17,5 +21,10 @@ python -m pytest -q || status=$?
 echo
 echo "===== route_batch smoke benchmark ====="
 python -m benchmarks.route_batch_bench --smoke || status=$((status ? status : $?))
+
+echo
+echo "===== steady-state serving gate (compile-count == 0) ====="
+python -m benchmarks.route_batch_bench --smoke --ragged \
+    --assert-steady-state || status=$((status ? status : $?))
 
 exit "$status"

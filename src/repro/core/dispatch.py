@@ -1,0 +1,254 @@
+"""Steady-state dispatch layer: query bucketing + a persistent
+compiled-fn cache (DESIGN.md §8).
+
+Online traffic is ragged — every distinct batch size would be a fresh
+XLA compilation of route_batch, and at serving volume the compile queue,
+not the kernels, becomes the latency floor. This layer makes the hot
+path recompile-free at steady state:
+
+  * ragged batches are padded to power-of-two BUCKETS (the same policy
+    elo._pad_bucket applies to record scans, with a smaller floor), so
+    the universe of compiled shapes is the bucket ladder, not the
+    traffic;
+  * each bucket's executable is AOT-compiled (jit.lower().compile())
+    into an EVICTION-FREE cache keyed on
+    (batch_bucket, capacity, records_per_query, mode, backend) — the
+    full static signature of a dispatch. AOT executables bypass jit's
+    tracing machinery entirely, so a cache hit is a direct XLA call and
+    a compile can ONLY happen on a cache miss: `stats()` is an exact
+    compile ledger, which the CI steady-state gate asserts over;
+  * `warmup()` pre-bakes the ladder at engine startup, so the first
+    request of any size is already a hit.
+
+The cached executable is route_batch_choices — the lean variant whose
+(Q, M) score panel never leaves the device (the budget selection is
+fused into the replay kernel's epilogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elo
+from repro.core.state import RouterState, route_batch_choices
+
+#: default bucket ladder bounds (powers of two, inclusive)
+MIN_BUCKET = 8
+MAX_BUCKET = 1024
+
+
+# ---------------------------------------------------------------------------
+# XLA compile counter (exact, process-wide)
+# ---------------------------------------------------------------------------
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_compile_count = 0
+_counter_lock = threading.Lock()
+_listener_registered = False
+
+
+def _on_event(name: str, *_a, **_k):
+    global _compile_count
+    if name == _COMPILE_EVENT:
+        with _counter_lock:
+            _compile_count += 1
+
+
+def _ensure_listener():
+    """Register the jax.monitoring listener once per process (there is
+    no unregister API; the listener is a counter bump, negligible)."""
+    global _listener_registered
+    with _counter_lock:
+        if not _listener_registered:
+            jax.monitoring.register_event_duration_secs_listener(_on_event)
+            _listener_registered = True
+
+
+def xla_compile_count() -> int:
+    """Process-wide count of XLA backend compilations observed since the
+    first CompileCounter/RouteDispatcher was created. Differences of
+    this counter bound the compiles of any code region."""
+    _ensure_listener()
+    return _compile_count
+
+
+class CompileCounter:
+    """Compile-count delta reader: `with CompileCounter() as c: ...` or
+    manual `c.delta()`. Backed by jax.monitoring's backend-compile
+    event, so it sees EVERY compilation in the process — jit cache
+    misses, AOT compiles, transfers' helper programs — not just the
+    dispatch cache's own misses."""
+
+    def __init__(self):
+        _ensure_listener()
+        self.start = xla_compile_count()
+        self.count = 0
+
+    def delta(self) -> int:
+        self.count = xla_compile_count() - self.start
+        return self.count
+
+    def __enter__(self):
+        self.start = xla_compile_count()
+        return self
+
+    def __exit__(self, *exc):
+        self.delta()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# the dispatcher
+# ---------------------------------------------------------------------------
+
+def batch_bucket(n: int, min_bucket: int = MIN_BUCKET,
+                 max_bucket: int = MAX_BUCKET) -> int:
+    """Power-of-two bucket for a batch of n queries (elo._pad_bucket
+    policy with a query-sized floor). Batches beyond max_bucket keep
+    their exact padded size — they are rare enough to compile for."""
+    b = elo._pad_bucket(max(1, n), floor=min_bucket)
+    return b if b <= max_bucket else elo._pad_bucket(n, floor=max_bucket)
+
+
+def bucket_ladder(min_bucket: int = MIN_BUCKET,
+                  max_bucket: int = MAX_BUCKET) -> Tuple[int, ...]:
+    """All buckets the dispatcher can produce up to max_bucket."""
+    out = []
+    b = min_bucket
+    while b <= max_bucket:
+        out.append(b)
+        b *= 2
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    hits: int = 0
+    misses: int = 0          # == compilations caused by this dispatcher
+    warmed: int = 0          # misses taken by warmup(), not traffic
+    compile_s: float = 0.0   # total seconds spent compiling
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class RouteDispatcher:
+    """Owns the serving hot path's compiled executables.
+
+    One dispatcher per (routing config, costs) pair; states of any
+    capacity/record width flow through it — the cache key carries the
+    shape-defining axes. Thread-compat: routing itself is pure; the
+    cache dict is guarded for concurrent warmers."""
+
+    def __init__(self, costs, *, p_global: float = 0.5,
+                 n_neighbors: int = 20, k: float = 32.0,
+                 backend: str = "reference", mode: str = "combined",
+                 init_rating: float = elo.DEFAULT_RATING,
+                 min_bucket: int = MIN_BUCKET,
+                 max_bucket: int = MAX_BUCKET):
+        self.costs = jnp.asarray(costs, jnp.float32)
+        self.kw = dict(p_global=float(p_global),
+                       n_neighbors=int(n_neighbors), k=float(k),
+                       backend=backend, mode=mode,
+                       init_rating=float(init_rating))
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self._cache: Dict[Tuple, jax.stages.Compiled] = {}
+        self._lock = threading.Lock()
+        self.stats = DispatchStats()
+        _ensure_listener()
+
+    @classmethod
+    def for_router(cls, router, **kw) -> "RouteDispatcher":
+        """Build from an EagleRouter's config (costs, mode, backend...)."""
+        c = router.cfg
+        return cls(router.costs, p_global=c.p_global,
+                   n_neighbors=c.n_neighbors, k=c.k_factor,
+                   backend=c.backend, mode=router.mode,
+                   init_rating=c.init_rating, **kw)
+
+    # -- cache ---------------------------------------------------------------
+    def bucket(self, n: int) -> int:
+        return batch_bucket(n, self.min_bucket, self.max_bucket)
+
+    def _key(self, state: RouterState, qb: int) -> Tuple:
+        return (qb, state.capacity, state.records_per_query,
+                self.kw["mode"], self.kw["backend"])
+
+    def _compiled(self, state: RouterState, qb: int, warm: bool = False):
+        key = self._key(state, qb)
+        fn = self._cache.get(key)
+        if fn is not None:
+            if not warm:
+                self.stats.hits += 1
+            return fn
+        with self._lock:
+            fn = self._cache.get(key)
+            if fn is None:
+                import time
+                t0 = time.perf_counter()
+                q = jax.ShapeDtypeStruct((qb, state.dim), jnp.float32)
+                b = jax.ShapeDtypeStruct((qb,), jnp.float32)
+                c = jax.ShapeDtypeStruct(self.costs.shape, jnp.float32)
+                fn = route_batch_choices.lower(
+                    state, q, b, c, **self.kw).compile()
+                self._cache[key] = fn
+                self.stats.misses += 1
+                self.stats.warmed += bool(warm)
+                self.stats.compile_s += time.perf_counter() - t0
+        return fn
+
+    def warmup(self, state: RouterState,
+               batch_sizes: Optional[Sequence[int]] = None) -> int:
+        """Pre-bake the bucket ladder for `state`'s shape signature so
+        steady-state traffic never compiles. Returns the number of
+        executables compiled (0 if already warm)."""
+        buckets = sorted({self.bucket(n) for n in batch_sizes}
+                         if batch_sizes is not None
+                         else bucket_ladder(self.min_bucket,
+                                            self.max_bucket))
+        before = self.stats.misses
+        for qb in buckets:
+            self._compiled(state, qb, warm=True)
+        return self.stats.misses - before
+
+    def cache_stats(self) -> Dict:
+        """Eviction-free readout: nothing is ever dropped, so misses is
+        the exact number of executables this dispatcher ever built."""
+        return {**self.stats.as_dict(), "entries": len(self._cache),
+                "keys": sorted(self._cache)}
+
+    # -- the hot path --------------------------------------------------------
+    def route(self, state: RouterState, query_embs, budgets) -> np.ndarray:
+        """Bucket-pad, dispatch the cached executable, slice. Returns
+        host (Q,) int32 choices — the single readout of a routing step."""
+        q = np.atleast_2d(np.asarray(query_embs, np.float32))
+        nq = q.shape[0]
+        qb = self.bucket(nq)
+        if qb != nq:
+            q = np.pad(q, ((0, qb - nq), (0, 0)))
+        b = np.broadcast_to(np.asarray(budgets, np.float32),
+                            (nq,)).astype(np.float32)
+        if qb != nq:
+            b = np.pad(b, (0, qb - nq))
+        res = self._compiled(state, qb)(state, q, b, self.costs)
+        return np.asarray(res.choices)[:nq]
+
+    def route_result(self, state: RouterState, query_embs, budgets):
+        """Bucketed dispatch returning (choices (Q,), topk_idx (Q, n))
+        as host arrays, for callers that want the retrieval trace."""
+        q = np.atleast_2d(np.asarray(query_embs, np.float32))
+        nq = q.shape[0]
+        qb = self.bucket(nq)
+        qp = np.pad(q, ((0, qb - nq), (0, 0))) if qb != nq else q
+        b = np.broadcast_to(np.asarray(budgets, np.float32),
+                            (nq,)).astype(np.float32)
+        bp = np.pad(b, (0, qb - nq)) if qb != nq else b
+        res = self._compiled(state, qb)(state, qp, bp, self.costs)
+        return (np.asarray(res.choices)[:nq],
+                np.asarray(res.topk_idx)[:nq])

@@ -86,11 +86,13 @@ def local_elo(global_ratings, nbr_a, nbr_b, nbr_outcome, nbr_valid,
     return elo_scan(init, nbr_a.T, nbr_b.T, nbr_outcome.T, nbr_valid.T, k=k)
 
 
-def _pad_bucket(t: int) -> int:
-    """Round the record count up to a power-of-two bucket so the jitted
-    scan compiles once per bucket, not once per feedback-batch length —
-    the online path must stay O(new records) wall-clock, not O(compiles)."""
-    b = 64
+def _pad_bucket(t: int, floor: int = 64) -> int:
+    """Round a count up to a power-of-two bucket so the jitted consumer
+    compiles once per bucket, not once per length — the online path must
+    stay O(new records) wall-clock, not O(compiles). `floor` is the
+    smallest bucket (64 for record scans; the query-side dispatch cache
+    in core.dispatch uses a smaller floor for tiny batches)."""
+    b = floor
     while b < t:
         b *= 2
     return b

@@ -138,8 +138,8 @@ def _scatter_rows(emb, model_a, model_b, outcome, valid, rows,
             valid.at[rows].set(v_rows))
 
 
-def commit(db, global_ratings,
-           prev: Optional[RouterState] = None) -> RouterState:
+def commit(db, global_ratings, prev: Optional[RouterState] = None,
+           consumer: str = "default") -> RouterState:
     """Sync the host append buffer into a device RouterState.
 
     With a previous state of matching shape, only the rows touched since
@@ -147,12 +147,22 @@ def commit(db, global_ratings,
     buffers (the 100-200x incremental-update claim depends on this being
     O(new records), not O(history)). `prev` MUST NOT be used after this
     call — its buffers are donated. Row counts are padded to power-of-two
-    buckets so the scatter compiles once per bucket."""
-    rows = db.drain_dirty()
+    buckets so the scatter compiles once per bucket.
+
+    `consumer` names the dirty-row ledger to drain: each device replica
+    of the buffer (e.g. the two halves of a DoubleBuffer) drains its own
+    ledger, so rows landing between two replicas' commits reach both."""
+    rows = db.drain_dirty(consumer)
     if (prev is None or prev.emb.shape != db.emb.shape
             or prev.model_a.shape != db.model_a.shape):
         return state_from_buffer(db, global_ratings)
     g = jnp.asarray(global_ratings, jnp.float32)
+    if rows.size:
+        # rollback/clear guard: a drained row at/past the live count is
+        # stale (its content is masked by `size` anyway) — drop it
+        # rather than scatter it, and never index rows[0] of what could
+        # now be an empty set.
+        rows = rows[rows < db.size]
     if rows.size == 0:
         return dataclasses.replace(prev, global_ratings=g,
                                    size=jnp.int32(db.size))
@@ -170,6 +180,43 @@ def commit(db, global_ratings,
                        outcome=o, valid=v, size=jnp.int32(db.size))
 
 
+class DoubleBuffer:
+    """Two device replicas of the router state over ONE host buffer, so
+    feedback commits overlap in-flight routing (DESIGN.md §8).
+
+    Protocol: `front` serves every route_batch dispatch; `commit()`
+    drains the BACK replica's dirty-row ledger into its donated buffers
+    and swaps, so the scatter never donates a buffer an in-flight
+    dispatch may still be reading, and the host never blocks on it
+    (async dispatch). Each replica keeps its own ledger (VectorDB
+    consumers), so rows appended between a replica's commits reach it on
+    its next turn."""
+
+    def __init__(self, db, global_ratings, tags=("dbuf_a", "dbuf_b")):
+        self.db = db
+        db.register_consumer(tags[0])
+        db.register_consumer(tags[1])
+        self._front = (commit(db, global_ratings, None, consumer=tags[0]),
+                       tags[0])
+        self._back = (commit(db, global_ratings, None, consumer=tags[1]),
+                      tags[1])
+
+    @property
+    def front(self) -> RouterState:
+        """The replica live dispatches read. Valid until the SECOND next
+        commit() (one swap keeps it as back, the next donates it)."""
+        return self._front[0]
+
+    def commit(self, global_ratings) -> RouterState:
+        """Absorb pending feedback into the back replica, swap, return
+        the new front. Enqueued asynchronously: routing already in
+        flight on the old front is never disturbed."""
+        st, tag = self._back
+        new = commit(self.db, global_ratings, st, consumer=tag)
+        self._back, self._front = self._front, (new, tag)
+        return self.front
+
+
 # ---------------------------------------------------------------------------
 # the fused routing pipeline
 # ---------------------------------------------------------------------------
@@ -177,6 +224,11 @@ def commit(db, global_ratings,
 class RouteResult(NamedTuple):
     choices: jax.Array    # (Q,)   selected model per query
     scores: jax.Array     # (Q, M) combined quality scores
+    topk_idx: jax.Array   # (Q, N) retrieved prompt rows (-1 in global mode)
+
+
+class RouteChoices(NamedTuple):
+    choices: jax.Array    # (Q,)   selected model per query
     topk_idx: jax.Array   # (Q, N) retrieved prompt rows (-1 in global mode)
 
 
@@ -215,8 +267,43 @@ def batch_scores(state: RouterState, query_embs, *, p_global: float = 0.5,
                    mode, init_rating)[0]
 
 
+def _route(state: RouterState, q, budgets, costs, p_global, n_neighbors,
+           k, backend, mode, init_rating):
+    """Shared body of route_batch/route_batch_choices: the retrieval +
+    replay + budget-selection chain with the selection folded into the
+    kernel epilogue (choices leave the replay tile directly; the
+    standalone select_within_budget stays as the parity oracle)."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+    nq = q.shape[0]
+    m = state.n_models
+    n = min(n_neighbors, state.capacity)
+    costs = jnp.asarray(costs, jnp.float32)
+    budgets = jnp.broadcast_to(jnp.asarray(budgets, jnp.float32), (nq,))
+    if mode == "global":
+        # Eagle-Global ablation: no retrieval, selection is the whole op
+        scores = jnp.broadcast_to(state.global_ratings, (nq, m))
+        choices, _ = select_within_budget(scores, costs, budgets)
+        return choices, scores, jnp.full((nq, n), -1, jnp.int32)
+    if mode == "local":
+        init = jnp.full((m,), jnp.float32(init_rating))  # flat prior
+        p = 0.0   # 0*Global + 1*Local == Local, bit-exact for finite r
+    else:
+        init = state.global_ratings
+        p = p_global
+    local, top_i, _, choices = KOPS.retrieve_replay_select(
+        q, state.emb, state.model_a, state.model_b, state.outcome,
+        state.valid, state.size, init, state.global_ratings, costs,
+        budgets, n=n, k=k, p=p, backend=backend)
+    scores = local if mode == "local" else \
+        combine_scores(state.global_ratings, local, p_global)
+    return choices, scores, top_i
+
+
 @partial(jax.jit,
-         static_argnames=("n_neighbors", "k", "backend", "mode"))
+         static_argnames=("p_global", "n_neighbors", "k", "backend",
+                          "mode", "init_rating"))
 def route_batch(state: RouterState, query_embs, budgets, costs, *,
                 p_global: float = 0.5, n_neighbors: int = 20,
                 k: float = 32.0, backend: str = "reference",
@@ -224,10 +311,28 @@ def route_batch(state: RouterState, query_embs, budgets, costs, *,
                 init_rating: float = elo.DEFAULT_RATING) -> RouteResult:
     """Route a batch of queries under budgets: the entire hot path —
     similarity, top-k, feedback gather, local ELO replay, score
-    combination, budget masking — fused into a single device dispatch."""
-    scores, top_i = _scores(state, query_embs, p_global, n_neighbors, k,
-                            backend, mode, init_rating)
-    choices, _ = select_within_budget(scores, jnp.asarray(costs,
-                                                          jnp.float32),
-                                      budgets)
+    combination, budget masking — fused into a single device dispatch,
+    with the budget selection folded into the replay kernel's epilogue."""
+    choices, scores, top_i = _route(state, query_embs, budgets, costs,
+                                    p_global, n_neighbors, k, backend,
+                                    mode, init_rating)
     return RouteResult(choices, scores, top_i)
+
+
+@partial(jax.jit,
+         static_argnames=("p_global", "n_neighbors", "k", "backend",
+                          "mode", "init_rating"))
+def route_batch_choices(state: RouterState, query_embs, budgets, costs, *,
+                        p_global: float = 0.5, n_neighbors: int = 20,
+                        k: float = 32.0, backend: str = "reference",
+                        mode: str = "combined",
+                        init_rating: float = elo.DEFAULT_RATING
+                        ) -> RouteChoices:
+    """Lean serving variant of route_batch: identical dataflow, but the
+    (Q, M) score panel is never an output — only the fused-epilogue
+    choices and the retrieval trace leave the device. This is what the
+    dispatch cache (core/dispatch.py) pre-compiles per bucket."""
+    choices, _, top_i = _route(state, query_embs, budgets, costs,
+                               p_global, n_neighbors, k, backend, mode,
+                               init_rating)
+    return RouteChoices(choices, top_i)

@@ -41,7 +41,10 @@ class VectorDB:
         self._alloc(capacity, records_per_query)
         self._row_of: Dict[int, int] = {}
         self._device: Optional[Tuple] = None  # cached device snapshot
-        self._dirty: set = set()           # rows touched since last commit
+        # rows touched since last commit, ONE ledger per device replica:
+        # every registered consumer sees every touch until it drains, so
+        # double-buffered states absorb rows landing between their turns
+        self._dirty: Dict[str, set] = {"default": set()}
 
     def _alloc(self, cq, r):
         self.emb = np.zeros((cq, self.dim), np.float32)
@@ -107,18 +110,41 @@ class VectorDB:
             self.outcome[row, slot] = outcome[i]
             self.valid[row, slot] = True
             self.n_rec[row] += 1
-            self._dirty.add(row)
+            for ledger in self._dirty.values():
+                ledger.add(row)
         self._device = None  # invalidate the device snapshot
 
-    def drain_dirty(self) -> np.ndarray:
-        """Rows touched since the last drain (sorted), then clear. The
-        commit() path uploads exactly these rows; a buffer realloc
-        (_grow) changes the array shapes, which commit() detects and
-        answers with a full re-upload instead."""
-        rows = np.fromiter(sorted(self._dirty), np.int32,
-                           count=len(self._dirty))
-        self._dirty.clear()
+    def register_consumer(self, name: str):
+        """Open a dirty-row ledger for another device replica of this
+        buffer (e.g. one half of a core.state.DoubleBuffer). The new
+        ledger starts empty: the consumer is expected to take a full
+        upload (commit with prev=None) as its first sync."""
+        self._dirty.setdefault(name, set())
+
+    def drain_dirty(self, consumer: str = "default") -> np.ndarray:
+        """Rows touched since `consumer`'s last drain (sorted), then
+        clear that ledger. The commit() path uploads exactly these rows;
+        a buffer realloc (_grow) changes the array shapes, which
+        commit() detects and answers with a full re-upload instead."""
+        ledger = self._dirty.setdefault(consumer, set())
+        rows = np.fromiter(sorted(ledger), np.int32, count=len(ledger))
+        ledger.clear()
         return rows
+
+    def clear(self):
+        """Roll the buffer back to empty without reallocating. Device
+        states committed before the clear keep stale row contents, but
+        `size` masks them; re-added rows are re-dirtied by add() and
+        overwritten on the next commit. Stale entries left in a dirty
+        ledger (e.g. marked between a drain and this clear) are guarded
+        in commit() by the rows < size filter."""
+        self.size = 0
+        self._row_of.clear()
+        self.n_rec[:] = 0
+        self.valid[:] = False
+        self._device = None
+        for ledger in self._dirty.values():
+            ledger.clear()
 
     def _snapshot(self):
         if self._device is None:

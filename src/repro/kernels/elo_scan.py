@@ -45,6 +45,104 @@ def _elo_kernel(r_ref, a_ref, b_ref, s_ref, v_ref, out_ref, *, k: float):
     out_ref[...] = jax.lax.fori_loop(0, t, step, r0)
 
 
+def _first_index_where(mask, iota, m):
+    """Index of the first True along the last axis (== jnp.argmax
+    tie-breaking) as a VPU-friendly masked min — no argmax/argmin
+    primitives inside the kernel body."""
+    return jnp.min(jnp.where(mask, iota, m), axis=-1)
+
+
+def _elo_select_kernel(r_ref, a_ref, b_ref, s_ref, v_ref, g_ref, c_ref,
+                       bud_ref, out_ref, ch_ref, *, k: float, p: float):
+    r0 = r_ref[...].astype(jnp.float32)           # (BQ, M)
+    a_all = a_ref[...]
+    b_all = b_ref[...]
+    s_all = s_ref[...].astype(jnp.float32)
+    v_all = v_ref[...].astype(jnp.float32)
+    bq, m = r0.shape
+    t = a_all.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+
+    def step(i, r):
+        a = jax.lax.dynamic_slice_in_dim(a_all, i, 1, axis=1)  # (BQ,1)
+        b = jax.lax.dynamic_slice_in_dim(b_all, i, 1, axis=1)
+        s = jax.lax.dynamic_slice_in_dim(s_all, i, 1, axis=1)[:, 0]
+        v = jax.lax.dynamic_slice_in_dim(v_all, i, 1, axis=1)[:, 0]
+        one_a = (iota == a).astype(jnp.float32)                # (BQ,M)
+        one_b = (iota == b).astype(jnp.float32)
+        r_a = jnp.sum(r * one_a, axis=-1)
+        r_b = jnp.sum(r * one_b, axis=-1)
+        e_a = 1.0 / (1.0 + jnp.exp2(jnp.log2(10.0) * (r_b - r_a) / 400.0))
+        delta = k * (s - e_a) * v
+        return r + delta[:, None] * (one_a - one_b)
+
+    r = jax.lax.fori_loop(0, t, step, r0)
+    out_ref[...] = r
+
+    # budget-selection epilogue, straight out of VMEM: combine with the
+    # global prior, mask by affordability, first-max argmax (matching
+    # jnp.argmax tie-breaking), cheapest-model fallback.
+    g = g_ref[...].astype(jnp.float32)            # (1, M)
+    c = c_ref[...].astype(jnp.float32)            # (1, M)
+    bud = bud_ref[...].astype(jnp.float32)        # (BQ, 1)
+    combined = p * g + (1.0 - p) * r              # (BQ, M)
+    feasible = c <= bud                           # (BQ, M)
+    masked = jnp.where(feasible, combined, -jnp.inf)
+    mx = jnp.max(masked, axis=-1, keepdims=True)
+    choice = _first_index_where(masked == mx, iota, m)      # (BQ,)
+    cmin = jnp.min(c, axis=-1, keepdims=True)
+    fallback = _first_index_where(c == cmin, iota, m)       # (1,)
+    any_ok = jnp.any(feasible, axis=-1)
+    ch_ref[...] = jnp.where(any_ok, choice, fallback)[:, None]
+
+
+def elo_scan_select_pallas(ratings, a_idx, b_idx, outcome, valid,
+                           global_ratings, costs, budgets, *,
+                           p: float = 0.5, k: float = 32.0,
+                           block_q: int = 128, interpret: bool = False):
+    """Batched ELO replay with the budget-selection epilogue fused into
+    the same kernel body: after the T-step replay the (block_q, M)
+    rating tile is combined with the global prior
+    (Score = p*Global + (1-p)*Local), budget-masked, and argmax-reduced
+    while still resident in VMEM — choices never round-trip a second op
+    through HBM.
+
+    ratings: (Q, M) replay init; records (Q, T); global_ratings (M,);
+    costs (M,); budgets (Q,). Returns (ratings (Q, M) f32,
+    choices (Q,) int32)."""
+    q, m = ratings.shape
+    t = a_idx.shape[1]
+    pq = (-q) % block_q
+    pad2 = lambda x: jnp.pad(x, ((0, pq), (0, 0))) if pq else x
+    bud_col = budgets.astype(jnp.float32)[:, None]
+    args = (pad2(ratings.astype(jnp.float32)), pad2(a_idx), pad2(b_idx),
+            pad2(outcome.astype(jnp.float32)),
+            pad2(valid.astype(jnp.float32)),
+            global_ratings.astype(jnp.float32)[None, :],
+            costs.astype(jnp.float32)[None, :], pad2(bud_col))
+    grid = ((q + pq) // block_q,)
+    out, choices = pl.pallas_call(
+        partial(_elo_select_kernel, k=k, p=p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, t), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, t), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, t), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((block_q, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block_q, m), lambda i: (i, 0)),
+                   pl.BlockSpec((block_q, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((q + pq, m), jnp.float32),
+                   jax.ShapeDtypeStruct((q + pq, 1), jnp.int32)],
+        interpret=interpret,
+    )(*args)
+    return out[:q], choices[:q, 0]
+
+
 def elo_scan_pallas(ratings, a_idx, b_idx, outcome, valid, *, k: float = 32.0,
                     block_q: int = 128, interpret: bool = False):
     """ratings: (Q, M) initial; records (Q, T). Returns (Q, M) replayed."""

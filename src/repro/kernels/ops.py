@@ -18,7 +18,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.elo_scan import elo_scan_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.retrieve_replay import retrieve_replay_pallas
+from repro.kernels.retrieve_replay import (retrieve_replay_pallas,
+                                           retrieve_replay_select_pallas)
 from repro.kernels.similarity_topk import similarity_pallas
 
 
@@ -65,6 +66,25 @@ def retrieve_replay(q, emb, model_a, model_b, outcome, valid, size,
                      partial(retrieve_replay_pallas, n=n, k=k),
                      q, emb, model_a, model_b, outcome, valid, size,
                      init_ratings)
+
+
+@partial(jax.jit, static_argnames=("backend", "n", "k", "p"))
+def retrieve_replay_select(q, emb, model_a, model_b, outcome, valid, size,
+                           init_ratings, global_ratings, costs, budgets, *,
+                           n: int, k: float = 32.0, p: float = 0.5,
+                           backend: str = "reference"):
+    """retrieve_replay with the budget-selection epilogue fused in: the
+    replay stage also combines Score = p*Global + (1-p)*Local against
+    `global_ratings`, masks models costing over `budgets`, and emits the
+    per-query argmax (cheapest-model fallback) — the serving hot path
+    reads (Q,) choices with no second op over the (Q, M) scores.
+    Returns (local (Q,M), topk_idx (Q,n), topk_scores (Q,n),
+    choices (Q,) int32)."""
+    return _dispatch(backend,
+                     partial(ref.retrieve_replay_select_ref, n=n, k=k, p=p),
+                     partial(retrieve_replay_select_pallas, n=n, k=k, p=p),
+                     q, emb, model_a, model_b, outcome, valid, size,
+                     init_ratings, global_ratings, costs, budgets)
 
 
 @partial(jax.jit, static_argnames=("backend", "causal", "window"))

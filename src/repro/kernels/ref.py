@@ -76,13 +76,33 @@ def elo_replay_ref(ratings, a_idx, b_idx, outcome, valid, k=32.0):
     return out
 
 
+def budget_select_ref(scores, costs, budgets):
+    """Budget-selection epilogue: highest-scoring model with cost <=
+    budget, cheapest-model fallback when nothing fits. Must stay
+    choice-identical to core.state.select_within_budget (pinned by
+    tests); lives here too because kernels/ is the leaf layer and the
+    fused epilogue needs a copy the Pallas body is validated against.
+
+    scores: (Q, M); costs: (M,); budgets: (Q,). Returns (Q,) int32."""
+    feasible = costs[None, :] <= budgets[:, None]
+    masked = jnp.where(feasible, scores, -jnp.inf)
+    choice = jnp.argmax(masked, axis=-1)
+    fallback = jnp.argmin(costs)
+    return jnp.where(feasible.any(axis=-1), choice, fallback).astype(
+        jnp.int32)
+
+
 def retrieve_replay_pipeline(similarity_fn, replay_fn, q, emb, model_a,
                              model_b, outcome, valid, size, init_ratings,
                              *, n):
     """The fused retrieval chain — similarity panel -> live-row masked
     top-k -> farthest-first record gather -> replay from the broadcast
     prior — with the stage implementations injected, so the reference
-    and Pallas backends share ONE copy of the glue and cannot drift."""
+    and Pallas backends share ONE copy of the glue and cannot drift.
+
+    replay_fn may return either `local` or a `(local, *extras)` tuple
+    (the fused budget-selection epilogue returns `(local, choices)`);
+    extras are appended to the pipeline's return tuple."""
     scores = similarity_fn(q, emb)
     live = jnp.arange(emb.shape[0]) < size
     scores = jnp.where(live[None, :], scores, -jnp.inf)
@@ -90,8 +110,10 @@ def retrieve_replay_pipeline(similarity_fn, replay_fn, q, emb, model_a,
     hit = jnp.isfinite(top_s)
     a, b, s, v = gather_records(model_a, model_b, outcome, valid, top_i, hit)
     init = jnp.broadcast_to(init_ratings, (q.shape[0], init_ratings.shape[-1]))
-    local = replay_fn(init, a, b, s, v)
-    return local, top_i, top_s
+    out = replay_fn(init, a, b, s, v)
+    local, extras = (out[0], tuple(out[1:])) if isinstance(out, tuple) \
+        else (out, ())
+    return (local, top_i, top_s) + extras
 
 
 def retrieve_replay_ref(q, emb, model_a, model_b, outcome, valid, size,
@@ -102,6 +124,25 @@ def retrieve_replay_ref(q, emb, model_a, model_b, outcome, valid, size,
     return retrieve_replay_pipeline(
         similarity_ref, partial(elo_replay_ref, k=k), q, emb, model_a,
         model_b, outcome, valid, size, init_ratings, n=n)
+
+
+def retrieve_replay_select_ref(q, emb, model_a, model_b, outcome, valid,
+                               size, init_ratings, global_ratings, costs,
+                               budgets, *, n, k=32.0, p=0.5):
+    """retrieve_replay with the budget-selection epilogue fused in: the
+    replay stage also combines Score = p*Global + (1-p)*Local and picks
+    the best affordable model, so the caller reads (Q,) choices without
+    a second op over the (Q, M) scores. Returns (local (Q,M), topk_idx,
+    topk_scores, choices (Q,))."""
+
+    def replay_select(init, a, b, s, v):
+        local = elo_replay_ref(init, a, b, s, v, k=k)
+        combined = p * global_ratings[None, :] + (1.0 - p) * local
+        return local, budget_select_ref(combined, costs, budgets)
+
+    return retrieve_replay_pipeline(
+        similarity_ref, replay_select, q, emb, model_a, model_b, outcome,
+        valid, size, init_ratings, n=n)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0):

@@ -20,7 +20,7 @@ from functools import partial
 
 import jax.numpy as jnp
 
-from repro.kernels.elo_scan import elo_scan_pallas
+from repro.kernels.elo_scan import elo_scan_pallas, elo_scan_select_pallas
 from repro.kernels.ref import retrieve_replay_pipeline
 from repro.kernels.similarity_topk import similarity_pallas
 
@@ -44,3 +44,28 @@ def retrieve_replay_pallas(q, emb, model_a, model_b, outcome, valid, size,
     return retrieve_replay_pipeline(
         partial(similarity_pallas, interpret=interpret), replay, q, emb,
         model_a, model_b, outcome, valid, size, init_ratings, n=n)
+
+
+def retrieve_replay_select_pallas(q, emb, model_a, model_b, outcome, valid,
+                                  size, init_ratings, global_ratings, costs,
+                                  budgets, *, n, k: float = 32.0,
+                                  p: float = 0.5, interpret: bool = False):
+    """retrieve_replay with the budget-selection epilogue fused into the
+    ELO kernel body (elo_scan_select_pallas): the replay tile is
+    combined with the global prior, budget-masked and argmax-reduced in
+    VMEM, so the per-query choice leaves the kernel directly instead of
+    materializing the (Q, M) scores through a second op.
+
+    Extra args over retrieve_replay_pallas: global_ratings (M,) combine
+    prior, costs (M,), budgets (Q,), p score weight (static). Returns
+    (local_ratings (Q,M), topk_idx (Q,n), topk_scores (Q,n),
+    choices (Q,) int32)."""
+
+    def replay_select(init, a, b, s, v):
+        return elo_scan_select_pallas(
+            init.astype(jnp.float32), a, b, s.astype(jnp.float32), v,
+            global_ratings, costs, budgets, p=p, k=k, interpret=interpret)
+
+    return retrieve_replay_pipeline(
+        partial(similarity_pallas, interpret=interpret), replay_select, q,
+        emb, model_a, model_b, outcome, valid, size, init_ratings, n=n)

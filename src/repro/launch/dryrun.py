@@ -322,6 +322,9 @@ def run_combo(arch: str, shape: str, mesh_name: str, out_dir: Path,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # older jax returns a per-device LIST of cost dicts
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         rec.update(

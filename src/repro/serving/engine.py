@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import RouteDispatcher
 from repro.core.router import EagleRouter
+from repro.core.state import DoubleBuffer
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -85,26 +87,50 @@ class FleetModel:
 
 
 class ServingEngine:
+    """Steady-state serving loop: routing runs through the bucketed
+    dispatch cache (core/dispatch.py) over a double-buffered
+    RouterState, so at steady state a serve() step triggers zero XLA
+    compilations and feedback commits never stall in-flight routing."""
+
     def __init__(self, fleet: Dict[str, FleetModel], router: EagleRouter,
                  compare_rate: float = 0.2, seed: int = 0,
-                 quality_oracle: Optional[Callable] = None):
+                 quality_oracle: Optional[Callable] = None,
+                 dispatcher: Optional[RouteDispatcher] = None,
+                 warmup_batch_sizes: Optional[Sequence[int]] = None):
         assert list(fleet) == router.model_names, "fleet/router order mismatch"
         self.fleet = fleet
         self.router = router
         self.compare_rate = compare_rate
         self.rng = np.random.default_rng(seed)
         self.quality_oracle = quality_oracle  # (emb, model_idx) -> quality
-        self.stats = {"served": 0, "feedback": 0, "per_model":
-                      {m: 0 for m in fleet}}
+        self.dispatch = dispatcher or RouteDispatcher.for_router(router)
+        # two device replicas over the router's host buffer: route on
+        # the front while commits scatter into the back, then swap
+        self.dbuf = DoubleBuffer(router.db, router.global_ratings)
+        self.stats = {"served": 0, "feedback": 0, "commits": 0,
+                      "per_model": {m: 0 for m in fleet}}
+        if warmup_batch_sizes is not None:
+            self.warmup(warmup_batch_sizes)
+
+    def warmup(self, batch_sizes: Optional[Sequence[int]] = None) -> int:
+        """Pre-bake the dispatch cache's bucket ladder (and one commit
+        cycle per buffer, so the scatter/ELO-fold executables are warm
+        too). Call at startup; steady-state traffic then never
+        compiles. Returns the number of route executables compiled."""
+        n = self.dispatch.warmup(self.dbuf.front, batch_sizes)
+        for _ in range(2):  # one commit per replica bakes the scatter
+            self.dbuf.commit(self.router.global_ratings)
+        return n
 
     def serve(self, requests: Sequence[Request]) -> List[Response]:
         t0 = time.perf_counter()
         embs = np.stack([r.embedding for r in requests])
         budgets = np.asarray([r.budget for r in requests], np.float32)
-        # ②/③ the whole routing hot path (similarity -> replay -> score
-        # combine -> budget masking) is ONE jitted dispatch; the single
-        # host readout is the final per-request choice
-        choices = np.asarray(self.router.route_result(embs, budgets).choices)
+        # ②/③ the whole routing hot path (similarity -> replay -> budget
+        # masking in the kernel epilogue) is ONE bucketed dispatch of a
+        # pre-compiled executable over the FRONT buffer; the single host
+        # readout is the final per-request choice
+        choices = self.dispatch.route(self.dbuf.front, embs, budgets)
         route_dt = time.perf_counter() - t0
 
         # ④ group by chosen model, pad to a batch, generate. Each group
@@ -147,4 +173,9 @@ class ServingEngine:
                 outcome = np.where(qa == qb, 0.5, (qa > qb).astype(np.float32))
                 self.router.feedback(embs[idxs], a, b, outcome)
                 self.stats["feedback"] += int(idxs.size)
+                # absorb the new rows into the BACK buffer and swap —
+                # async, so it overlaps anything still in flight on the
+                # old front (double-buffered commit protocol)
+                self.dbuf.commit(self.router.global_ratings)
+                self.stats["commits"] += 1
         return responses

@@ -57,7 +57,10 @@ def batch_axes(mesh: Mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
 
 
 def _right_align(spec: Sequence, ndim: int) -> P:
-    spec = list(spec)
+    # canonicalize 1-tuples of mesh axes to the bare axis name:
+    # P(("data",)) and P("data") place identically but compare unequal
+    spec = [s[0] if isinstance(s, tuple) and len(s) == 1 else s
+            for s in spec]
     assert len(spec) <= ndim, (spec, ndim)
     return P(*([None] * (ndim - len(spec)) + spec))
 

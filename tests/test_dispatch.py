@@ -1,0 +1,194 @@
+"""Tests for the steady-state dispatch layer (core/dispatch.py) and the
+fused budget-selection epilogue: bucket policy, bucket-padding
+invariance of choices (raw vs dispatcher-padded, all modes, both
+backends), no-recompile within a bucket, fused choices vs the
+select_within_budget oracle, warmup precompilation, and DoubleBuffer
+equivalence to a full upload."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dispatch import (MIN_BUCKET, CompileCounter, RouteDispatcher,
+                                 batch_bucket, bucket_ladder,
+                                 xla_compile_count)
+from repro.core.router import (EagleConfig, EagleRouter, GlobalOnlyRouter,
+                               LocalOnlyRouter, select_within_budget)
+from repro.core.state import DoubleBuffer, route_batch, state_from_buffer
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROUTERS = {"combined": EagleRouter, "global": GlobalOnlyRouter,
+           "local": LocalOnlyRouter}
+
+
+def _router(seed=0, n_models=5, dim=8, n_prompts=40, capacity=64,
+            mode="combined", backend="reference"):
+    rng = np.random.default_rng(seed)
+    r = ROUTERS[mode]([f"m{i}" for i in range(n_models)],
+                      np.arange(1, n_models + 1.0),
+                      EagleConfig(embed_dim=dim, backend=backend),
+                      db_capacity=capacity)
+    emb = rng.normal(size=(n_prompts, dim)).astype(np.float32)
+    a = rng.integers(0, n_models, n_prompts)
+    b = (a + 1 + rng.integers(0, n_models - 1, n_prompts)) % n_models
+    s = rng.choice([0.0, 0.5, 1.0], n_prompts)
+    r.fit(emb, a, b, s, query_id=np.arange(n_prompts))
+    return r, rng
+
+
+# ---------------------------------------------------------------------------
+# bucket policy
+# ---------------------------------------------------------------------------
+
+def test_batch_bucket_policy():
+    assert batch_bucket(1) == MIN_BUCKET
+    assert batch_bucket(MIN_BUCKET) == MIN_BUCKET
+    assert batch_bucket(MIN_BUCKET + 1) == 2 * MIN_BUCKET
+    assert batch_bucket(1000) == 1024
+    # beyond max_bucket: still pow2-padded (rare, but never raises)
+    assert batch_bucket(1025) == 2048
+    assert bucket_ladder(8, 64) == (8, 16, 32, 64)
+    for n in (1, 7, 9, 100, 500):
+        assert batch_bucket(n) >= n
+
+
+# ---------------------------------------------------------------------------
+# bucket-padding invariance + oracle parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", list(ROUTERS))
+@pytest.mark.parametrize("backend", ["reference", "pallas_interpret"])
+def test_bucketed_choices_bit_identical_to_raw(mode, backend):
+    """Dispatcher-padded routing must give exactly the raw route_batch
+    choices: padded rows change nothing about live rows."""
+    r, rng = _router(seed=1, mode=mode, backend=backend)
+    d = RouteDispatcher.for_router(r)
+    for nq in (1, 7, 8, 13):
+        q = rng.normal(size=(nq, 8)).astype(np.float32)
+        budgets = rng.uniform(0.5, 6.0, nq).astype(np.float32)
+        raw = np.asarray(r.route(q, budgets))
+        np.testing.assert_array_equal(d.route(r.state, q, budgets), raw)
+
+
+@pytest.mark.parametrize("mode", list(ROUTERS))
+@pytest.mark.parametrize("backend", ["reference", "pallas_interpret"])
+def test_fused_epilogue_matches_budget_oracle(mode, backend):
+    """The choices emitted by the kernel epilogue must be bit-identical
+    to select_within_budget applied to the returned score panel (the
+    standalone function is the parity oracle)."""
+    r, rng = _router(seed=2, mode=mode, backend=backend)
+    q = rng.normal(size=(9, 8)).astype(np.float32)
+    # include infeasible budgets to exercise the cheapest-model fallback
+    budgets = np.concatenate([
+        rng.uniform(0.5, 6.0, 7), [0.0, 0.1]]).astype(np.float32)
+    res = r.route_result(q, budgets)
+    oracle, _ = select_within_budget(res.scores, r.costs, budgets)
+    np.testing.assert_array_equal(np.asarray(res.choices),
+                                  np.asarray(oracle))
+
+
+def test_scalar_budget_broadcasts():
+    r, rng = _router(seed=3)
+    q = rng.normal(size=(5, 8)).astype(np.float32)
+    per_q = np.full((5,), 3.0, np.float32)
+    np.testing.assert_array_equal(np.asarray(r.route(q, 3.0)),
+                                  np.asarray(r.route(q, per_q)))
+    d = RouteDispatcher.for_router(r)
+    np.testing.assert_array_equal(d.route(r.state, q, 3.0),
+                                  np.asarray(r.route(q, per_q)))
+
+
+# ---------------------------------------------------------------------------
+# compile behavior: one executable per bucket, warmup pre-bakes
+# ---------------------------------------------------------------------------
+
+def test_same_bucket_no_second_compile():
+    """Two batch sizes landing in the same bucket share one executable:
+    cache stats record a single miss AND jax.monitoring observes zero
+    backend compilations on the second call."""
+    r, rng = _router(seed=4)
+    d = RouteDispatcher.for_router(r)
+    d.route(r.state, rng.normal(size=(9, 8)).astype(np.float32), 3.0)
+    assert d.cache_stats()["misses"] == 1
+    with CompileCounter() as c:
+        d.route(r.state, rng.normal(size=(13, 8)).astype(np.float32), 3.0)
+    assert c.delta() == 0
+    stats = d.cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+    assert stats["entries"] == 1
+
+
+def test_warmup_prebakes_ladder():
+    r, rng = _router(seed=5)
+    d = RouteDispatcher.for_router(r, max_bucket=32)
+    n = d.warmup(r.state)
+    assert n == len(bucket_ladder(d.min_bucket, 32)) == 3
+    assert d.warmup(r.state) == 0  # idempotent
+    with CompileCounter() as c:
+        for nq in (1, 5, 8, 9, 16, 17, 31, 32):
+            d.route(r.state, rng.normal(size=(nq, 8)).astype(np.float32),
+                    2.5)
+    assert c.delta() == 0
+    stats = d.cache_stats()
+    assert stats["misses"] == stats["warmed"] == 3
+
+
+def test_cache_key_tracks_state_shape():
+    """Growing the DB changes (capacity, records_per_query) — the cache
+    key must see that as a new signature, not serve a stale executable."""
+    rng = np.random.default_rng(6)
+    r = EagleRouter(["a", "b", "c"], [1.0, 2.0, 3.0],
+                    EagleConfig(embed_dim=4), db_capacity=4)
+    r.fit(rng.normal(size=(3, 4)).astype(np.float32), [0, 1, 2],
+          [1, 2, 0], [1.0, 0.5, 0.0], query_id=[0, 1, 2])
+    d = RouteDispatcher.for_router(r)
+    q = rng.normal(size=(2, 4)).astype(np.float32)
+    d.route(r.state, q, 5.0)
+    assert d.cache_stats()["entries"] == 1
+    r.update(rng.normal(size=(7, 4)).astype(np.float32), [0] * 7, [1] * 7,
+             [1.0] * 7, query_id=list(range(3, 10)))  # forces _grow
+    ch = d.route(r.state, q, 5.0)
+    assert d.cache_stats()["entries"] == 2
+    np.testing.assert_array_equal(ch, np.asarray(r.route(q, 5.0)))
+
+
+# ---------------------------------------------------------------------------
+# DoubleBuffer: both replicas track the host buffer
+# ---------------------------------------------------------------------------
+
+def test_double_buffer_front_equals_full_upload():
+    """After every commit the new front must equal a from-scratch upload
+    of the host buffer: per-consumer ledgers deliver rows appended
+    between a replica's turns."""
+    r, rng = _router(seed=7)
+    dbuf = DoubleBuffer(r.db, r.global_ratings)
+    for round_ in range(4):
+        emb = rng.normal(size=(3, 8)).astype(np.float32)
+        r.update(emb, [0, 1, 2], [1, 2, 0], [1.0, 0.0, 0.5],
+                 query_id=[100 + 3 * round_ + i for i in range(3)])
+        front = dbuf.commit(r.global_ratings)
+        full = state_from_buffer(r.db, r.global_ratings)
+        for got, want in zip(jax.tree_util.tree_leaves(front),
+                             jax.tree_util.tree_leaves(full)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_double_buffer_routing_equivalence():
+    """Routing over the double-buffered front == routing over the
+    router's own (single-buffer) state, across interleaved commits."""
+    r, rng = _router(seed=8)
+    dbuf = DoubleBuffer(r.db, r.global_ratings)
+    d = RouteDispatcher.for_router(r)
+    kw = r._kw()
+    for round_ in range(3):
+        q = rng.normal(size=(6, 8)).astype(np.float32)
+        budgets = rng.uniform(0.5, 6.0, 6).astype(np.float32)
+        got = d.route(dbuf.front, q, budgets)
+        want = np.asarray(route_batch(
+            state_from_buffer(r.db, r.global_ratings), q, budgets,
+            r.costs, **kw).choices)
+        np.testing.assert_array_equal(got, want)
+        r.feedback(rng.normal(size=(2, 8)).astype(np.float32),
+                   [0, 1], [2, 3], [1.0, 0.0])
+        dbuf.commit(r.global_ratings)

@@ -136,6 +136,60 @@ def test_commit_after_db_growth():
     assert np.asarray(res.choices).shape == (2,)
 
 
+def test_commit_guards_stale_dirty_rows_after_clear():
+    """Rollback race: rows marked dirty between a drain and a clear()
+    leave the ledger pointing past the live count. commit() must drop
+    them (rows < size) instead of scattering stale content — and must
+    not index rows[0] of the then-empty set."""
+    router, rng = _random_router(seed=11)
+    s1 = router.state
+    router.db.clear()
+    # simulate the race: ledger refers to rows at/past db.size == 0
+    router.db._dirty["default"].update({0, 3, 7})
+    s2 = commit(router.db, router.global_ratings, s1)
+    assert int(s2.size) == 0
+    # empty DB: retrieval is fully masked, scores fall back to the prior
+    q = rng.normal(size=(2, 8)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(batch_scores(s2, q)),
+        np.tile(np.asarray(s2.global_ratings), (2, 1)), rtol=1e-6)
+
+
+def test_commit_mixed_live_and_stale_dirty_rows():
+    """After clear()+re-add, only rows below the live count scatter;
+    stale ledger entries beyond it are dropped, and the result matches
+    a from-scratch upload."""
+    router, rng = _random_router(seed=12)
+    s1 = router.state
+    db = router.db
+    db.clear()
+    emb = rng.normal(size=(2, 8)).astype(np.float32)
+    router.update(emb, [0, 1], [1, 2], [1.0, 0.0], query_id=[0, 1])
+    db._dirty["default"].add(30)          # stale row past size == 2
+    router._state, router._stale = s1, True
+    s2 = router.state                     # commit() with the guard
+    assert int(s2.size) == 2
+    full = state_from_buffer(db, router.global_ratings)
+    np.testing.assert_allclose(np.asarray(s2.emb[:2]),
+                               np.asarray(full.emb[:2]))
+    np.testing.assert_array_equal(np.asarray(s2.valid[:2]),
+                                  np.asarray(full.valid[:2]))
+
+
+def test_vectordb_clear_resets_and_reuses():
+    router, rng = _random_router(seed=13)
+    db = router.db
+    assert db.size > 0
+    db.clear()
+    assert db.size == 0 and not db.valid.any() and not db.n_rec.any()
+    for ledger in db._dirty.values():
+        assert not ledger
+    # buffer is reusable in place: same shapes, fresh content
+    emb = rng.normal(size=(3, 8)).astype(np.float32)
+    db.add(emb, [0, 1, 2], [1, 2, 0], [1.0, 0.5, 0.0], query_id=[0, 1, 2])
+    assert db.size == 3 and db.valid[:3, 0].all()
+
+
 def test_commit_without_writes_refreshes_ratings_only():
     router, rng = _random_router(seed=7)
     s1 = router.state
