@@ -9,6 +9,7 @@ import argparse
 import numpy as np
 
 from repro.launch.serve import build_engine
+from repro.obs import Observability
 from repro.serving.engine import Request
 
 
@@ -18,9 +19,12 @@ def main():
     ap.add_argument("--fleet", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", type=str, default=None,
+                    help="write a Chrome-trace JSON of the serve step here")
     args = ap.parse_args()
 
-    engine, corpus = build_engine(args.fleet, seed=args.seed)
+    ob = Observability(enabled=True)
+    engine, corpus = build_engine(args.fleet, seed=args.seed, obs=ob)
     rng = np.random.default_rng(args.seed)
     rows = corpus.test_idx[:args.requests]
     budgets = rng.uniform(corpus.costs.min(), corpus.costs.max(),
@@ -42,6 +46,29 @@ def main():
     print(f"feedback collected online: {engine.stats['feedback']}")
     moved = np.abs(ratings_after - ratings_before).max()
     print(f"max global-ELO movement from online feedback: {moved:.2f}")
+
+    # telemetry readout: the serve step above ran fully instrumented
+    # (DESIGN.md §9) — latency histograms, per-layer counters, and one
+    # decision record per routed request
+    snap = engine.metrics_snapshot()
+    print("\nmetrics summary:")
+    for name, h in sorted(snap["histograms"].items()):
+        if h["count"] and name.endswith("_us"):
+            print(f"  {name:22s} n={h['count']:4d}  p50={h['p50']:9.1f}us"
+                  f"  p99={h['p99']:9.1f}us")
+    for name in ("serve_requests_total", "serve_feedback_total",
+                 "dispatch_cache_hits_total", "dispatch_cache_misses_total",
+                 "dbuf_swaps_total"):
+        if name in snap["counters"]:
+            print(f"  {name:28s} {snap['counters'][name]}")
+    decisions = ob.events.records("route")
+    print(f"\nroute decisions logged: {len(decisions)}; first 3:")
+    for d in decisions[:3]:
+        print(f"  rid={d['rid']:3d} model={d['model']:26s} "
+              f"budget={d['budget']:6.2f} feasible={d['feasible']}")
+    if args.trace:
+        ob.tracer.save_chrome_trace(args.trace)
+        print(f"\nchrome trace ({ob.tracer.recorded} spans) -> {args.trace}")
 
 
 if __name__ == "__main__":

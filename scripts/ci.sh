@@ -11,6 +11,13 @@
 # loop (random batch sizes, periodic feedback commits) may trigger an
 # XLA compilation. --assert-steady-state exits non-zero on the first
 # post-warmup compile (exact count via jax.monitoring).
+#
+# The obs gate (DESIGN.md §9) holds the telemetry substrate to its
+# contract: full instrumentation (spans + decision log + metrics) on
+# the same ragged loop must cost <5% of routing p50 (paired-delta
+# estimator), trigger zero compiles, and produce parseable artifacts
+# (Prometheus text, Chrome-trace JSON, decision JSONL with one record
+# per routed request). --assert-obs exits non-zero on any violation.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -26,5 +33,10 @@ echo
 echo "===== steady-state serving gate (compile-count == 0) ====="
 python -m benchmarks.route_batch_bench --smoke --ragged \
     --assert-steady-state || status=$((status ? status : $?))
+
+echo
+echo "===== telemetry overhead gate (<5% p50, artifacts parse) ====="
+python -m benchmarks.route_batch_bench --smoke \
+    --assert-obs || status=$((status ? status : $?))
 
 exit "$status"

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.core import elo
 from repro.core.state import RouterState, route_batch_choices
 
@@ -150,7 +151,8 @@ class RouteDispatcher:
                  backend: str = "reference", mode: str = "combined",
                  init_rating: float = elo.DEFAULT_RATING,
                  min_bucket: int = MIN_BUCKET,
-                 max_bucket: int = MAX_BUCKET):
+                 max_bucket: int = MAX_BUCKET,
+                 obs: Optional["OBS.Observability"] = None):
         self.costs = jnp.asarray(costs, jnp.float32)
         self.kw = dict(p_global=float(p_global),
                        n_neighbors=int(n_neighbors), k=float(k),
@@ -162,6 +164,41 @@ class RouteDispatcher:
         self._lock = threading.Lock()
         self.stats = DispatchStats()
         _ensure_listener()
+        # telemetry handles (metrics are always-on; spans are gated by
+        # obs.enabled). pad-waste ratio and cache hit rate are derived
+        # at scrape time from these raw counters.
+        self.obs = OBS.get_obs(obs)
+        r = self.obs.registry
+        self._m_calls = r.counter(
+            "dispatch_calls_total", "route() dispatches")
+        self._m_rows = r.counter(
+            "dispatch_rows_total", "real query rows routed")
+        self._m_padded = r.counter(
+            "dispatch_padded_rows_total",
+            "bucket-padded rows dispatched (>= rows; waste = padded-rows)")
+        self._m_hits = r.counter(
+            "dispatch_cache_hits_total", "executable-cache hits")
+        self._m_misses = r.counter(
+            "dispatch_cache_misses_total",
+            "executable-cache misses == compiles this dispatcher caused")
+        self._m_compile_s = r.counter(
+            "dispatch_compile_seconds_total", "time spent compiling")
+        self._h_occupancy = r.histogram(
+            "dispatch_bucket_occupancy", "rows/bucket fill per dispatch",
+            bounds=[i / 16 for i in range(1, 17)])
+        self._bucket_counters: Dict[int, "OBS.Counter"] = {}
+        r.gauge("xla_compiles_total",
+                "process-wide XLA backend compiles (jax.monitoring)",
+                fn=xla_compile_count)
+
+    def _bucket_counter(self, qb: int):
+        c = self._bucket_counters.get(qb)
+        if c is None:
+            c = self.obs.registry.counter(
+                "dispatch_bucket_total", "dispatches per bucket size",
+                bucket=str(qb))
+            self._bucket_counters[qb] = c
+        return c
 
     @classmethod
     def for_router(cls, router, **kw) -> "RouteDispatcher":
@@ -186,21 +223,30 @@ class RouteDispatcher:
         if fn is not None:
             if not warm:
                 self.stats.hits += 1
+                self._m_hits.inc()
             return fn
         with self._lock:
             fn = self._cache.get(key)
             if fn is None:
                 import time
                 t0 = time.perf_counter()
-                q = jax.ShapeDtypeStruct((qb, state.dim), jnp.float32)
-                b = jax.ShapeDtypeStruct((qb,), jnp.float32)
-                c = jax.ShapeDtypeStruct(self.costs.shape, jnp.float32)
-                fn = route_batch_choices.lower(
-                    state, q, b, c, **self.kw).compile()
+                with self.obs.span(f"dispatch.compile.q{qb}"):
+                    q = jax.ShapeDtypeStruct((qb, state.dim), jnp.float32)
+                    b = jax.ShapeDtypeStruct((qb,), jnp.float32)
+                    c = jax.ShapeDtypeStruct(self.costs.shape, jnp.float32)
+                    fn = route_batch_choices.lower(
+                        state, q, b, c, **self.kw).compile()
                 self._cache[key] = fn
                 self.stats.misses += 1
                 self.stats.warmed += bool(warm)
-                self.stats.compile_s += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                self.stats.compile_s += dt
+                self._m_misses.inc()
+                self._m_compile_s.inc(dt)
+                self.obs.emit({"kind": "dispatch_compile", "bucket": qb,
+                               "capacity": state.capacity,
+                               "records": state.records_per_query,
+                               "seconds": dt})
         return fn
 
     def warmup(self, state: RouterState,
@@ -223,6 +269,36 @@ class RouteDispatcher:
         return {**self.stats.as_dict(), "entries": len(self._cache),
                 "keys": sorted(self._cache)}
 
+    def telemetry(self) -> Dict:
+        """Derived serving-efficiency readout from the raw counters:
+        pad-waste ratio (fraction of dispatched rows that were bucket
+        padding), cache hit rate, and the exact compile ledger."""
+        rows = self._m_rows.value
+        padded = self._m_padded.value
+        hits, misses = self._m_hits.value, self._m_misses.value
+        # warmup()-induced compiles are deliberate pre-baking, not
+        # traffic misses — the hit rate reads over traffic only
+        traffic_misses = max(0, misses - self.stats.warmed)
+        return {
+            "calls": self._m_calls.value,
+            "rows": rows,
+            "padded_rows": padded,
+            "pad_waste_ratio": (padded - rows) / padded if padded else 0.0,
+            "cache_hit_rate": hits / (hits + traffic_misses)
+                              if (hits + traffic_misses) else 1.0,
+            "cache_hits": hits,
+            "cache_misses": misses,
+            "compile_seconds": self._m_compile_s.value,
+            "xla_compiles_process": xla_compile_count(),
+        }
+
+    def _record_dispatch(self, nq: int, qb: int):
+        self._m_calls.inc()
+        self._m_rows.inc(nq)
+        self._m_padded.inc(qb)
+        self._h_occupancy.observe(nq / qb)
+        self._bucket_counter(qb).inc()
+
     # -- the hot path --------------------------------------------------------
     def route(self, state: RouterState, query_embs, budgets) -> np.ndarray:
         """Bucket-pad, dispatch the cached executable, slice. Returns
@@ -230,14 +306,16 @@ class RouteDispatcher:
         q = np.atleast_2d(np.asarray(query_embs, np.float32))
         nq = q.shape[0]
         qb = self.bucket(nq)
-        if qb != nq:
-            q = np.pad(q, ((0, qb - nq), (0, 0)))
-        b = np.broadcast_to(np.asarray(budgets, np.float32),
-                            (nq,)).astype(np.float32)
-        if qb != nq:
-            b = np.pad(b, (0, qb - nq))
-        res = self._compiled(state, qb)(state, q, b, self.costs)
-        return np.asarray(res.choices)[:nq]
+        self._record_dispatch(nq, qb)
+        with self.obs.span("dispatch.route"):
+            if qb != nq:
+                q = np.pad(q, ((0, qb - nq), (0, 0)))
+            b = np.broadcast_to(np.asarray(budgets, np.float32),
+                                (nq,)).astype(np.float32)
+            if qb != nq:
+                b = np.pad(b, (0, qb - nq))
+            res = self._compiled(state, qb)(state, q, b, self.costs)
+            return np.asarray(res.choices)[:nq]
 
     def route_result(self, state: RouterState, query_embs, budgets):
         """Bucketed dispatch returning (choices (Q,), topk_idx (Q, n))
@@ -245,10 +323,12 @@ class RouteDispatcher:
         q = np.atleast_2d(np.asarray(query_embs, np.float32))
         nq = q.shape[0]
         qb = self.bucket(nq)
-        qp = np.pad(q, ((0, qb - nq), (0, 0))) if qb != nq else q
-        b = np.broadcast_to(np.asarray(budgets, np.float32),
-                            (nq,)).astype(np.float32)
-        bp = np.pad(b, (0, qb - nq)) if qb != nq else b
-        res = self._compiled(state, qb)(state, qp, bp, self.costs)
-        return (np.asarray(res.choices)[:nq],
-                np.asarray(res.topk_idx)[:nq])
+        self._record_dispatch(nq, qb)
+        with self.obs.span("dispatch.route_result"):
+            qp = np.pad(q, ((0, qb - nq), (0, 0))) if qb != nq else q
+            b = np.broadcast_to(np.asarray(budgets, np.float32),
+                                (nq,)).astype(np.float32)
+            bp = np.pad(b, (0, qb - nq)) if qb != nq else b
+            res = self._compiled(state, qb)(state, qp, bp, self.costs)
+            return (np.asarray(res.choices)[:nq],
+                    np.asarray(res.topk_idx)[:nq])

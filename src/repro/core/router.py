@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.core import elo
 from repro.core.state import (RouterState, RouteResult, batch_scores,
                               combine_scores, commit, route_batch,
@@ -56,6 +57,10 @@ class EagleRouter:
     #: route_batch scoring mode; the Appendix B ablation subclasses
     #: override this (see core.state.MODES).
     mode = "combined"
+
+    #: telemetry scope; None -> the module default (repro.obs.DEFAULT).
+    #: ServingEngine points this at its own scope.
+    obs: Optional["OBS.Observability"] = None
 
     def __init__(self, model_names: Sequence[str], costs,
                  cfg: EagleConfig = EagleConfig(), db_capacity: int = 4096):
@@ -152,8 +157,28 @@ class EagleRouter:
 
     # -- feedback loop (workflow step 5) ------------------------------------
     def feedback(self, query_emb, chosen, opponent, outcome):
-        """Record a user comparison between two served responses."""
-        return self.update(query_emb, chosen, opponent, outcome)
+        """Record a user comparison between two served responses.
+
+        Instrumented: the ELO update magnitude (max |Δrating| of the
+        global fold — how much this comparison actually moved the
+        router) lands in a histogram, and the batch size in a counter.
+        The magnitude math is host numpy on already-synced ratings, so
+        the steady-state zero-compile guarantee is untouched."""
+        o = OBS.get_obs(self.obs)
+        before = np.asarray(self.global_ratings) if o.enabled else None
+        with o.span("router.feedback"):
+            dt = self.update(query_emb, chosen, opponent, outcome)
+        n = np.asarray(chosen).reshape(-1).size
+        o.registry.counter("router_feedback_total",
+                           "pairwise comparisons folded online").inc(n)
+        if before is not None:
+            mag = float(np.max(np.abs(
+                np.asarray(self.global_ratings) - before)))
+            o.registry.histogram(
+                "router_elo_update_magnitude",
+                "max |delta global rating| per feedback fold",
+                bounds=OBS.geometric_bounds(1e-3, 100.0, 1.5)).observe(mag)
+        return dt
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.core import elo
 from repro.kernels import ops as KOPS
 
@@ -192,7 +193,8 @@ class DoubleBuffer:
     consumers), so rows appended between a replica's commits reach it on
     its next turn."""
 
-    def __init__(self, db, global_ratings, tags=("dbuf_a", "dbuf_b")):
+    def __init__(self, db, global_ratings, tags=("dbuf_a", "dbuf_b"),
+                 obs: Optional["OBS.Observability"] = None):
         self.db = db
         db.register_consumer(tags[0])
         db.register_consumer(tags[1])
@@ -200,6 +202,16 @@ class DoubleBuffer:
                        tags[0])
         self._back = (commit(db, global_ratings, None, consumer=tags[1]),
                       tags[1])
+        self.obs = OBS.get_obs(obs)
+        r = self.obs.registry
+        self._m_swaps = r.counter(
+            "dbuf_swaps_total", "double-buffer commit/swap cycles")
+        self._g_backlog = r.gauge(
+            "dbuf_dirty_backlog",
+            "dirty rows pending in the back replica's ledger at commit")
+        self._h_commit_us = r.histogram(
+            "dbuf_commit_us",
+            "host-side commit enqueue latency (scatter is async)")
 
     @property
     def front(self) -> RouterState:
@@ -211,9 +223,15 @@ class DoubleBuffer:
         """Absorb pending feedback into the back replica, swap, return
         the new front. Enqueued asynchronously: routing already in
         flight on the old front is never disturbed."""
+        import time
         st, tag = self._back
-        new = commit(self.db, global_ratings, st, consumer=tag)
+        self._g_backlog.set(len(self.db._dirty.get(tag, ())))
+        t0 = time.perf_counter_ns()
+        with self.obs.span("state.commit"):
+            new = commit(self.db, global_ratings, st, consumer=tag)
         self._back, self._front = self._front, (new, tag)
+        self._h_commit_us.observe((time.perf_counter_ns() - t0) / 1e3)
+        self._m_swaps.inc()
         return self.front
 
 
@@ -292,10 +310,14 @@ def _route(state: RouterState, q, budgets, costs, p_global, n_neighbors,
     else:
         init = state.global_ratings
         p = p_global
-    local, top_i, _, choices = KOPS.retrieve_replay_select(
-        q, state.emb, state.model_a, state.model_b, state.outcome,
-        state.valid, state.size, init, state.global_ratings, costs,
-        budgets, n=n, k=k, p=p, backend=backend)
+    # named_scope tags the fused chain's HLO ops so device ops group
+    # under one label in XLA profiles, next to the host-side
+    # TraceAnnotation spans the tracer emits around the dispatch
+    with jax.named_scope("eagle.retrieve_replay_select"):
+        local, top_i, _, choices = KOPS.retrieve_replay_select(
+            q, state.emb, state.model_a, state.model_b, state.outcome,
+            state.valid, state.size, init, state.global_ratings, costs,
+            budgets, n=n, k=k, p=p, backend=backend)
     scores = local if mode == "local" else \
         combine_scores(state.global_ratings, local, p_global)
     return choices, scores, top_i

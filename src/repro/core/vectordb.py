@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.kernels import ops as KOPS
 
 
@@ -61,6 +62,15 @@ class VectorDB:
                     self.rcap * 2 if need_r > self.rcap else self.rcap)
         if (new_q, new_r) == (self.capacity, self.rcap):
             return
+        # a grow is a shape change = full re-upload + recompiles
+        # downstream; it should be RARE at steady state, so it is an
+        # event worth logging, not just a counter bump
+        o = OBS.get_obs(None)
+        o.registry.counter(
+            "vectordb_grow_total",
+            "buffer reallocs (shape change -> full re-upload)").inc()
+        o.emit({"kind": "db_grow", "from": [self.capacity, self.rcap],
+                "to": [new_q, new_r], "size": self.size})
         emb = np.zeros((new_q, self.dim), np.float32)
         emb[:self.capacity] = self.emb
         self.emb = emb
@@ -113,6 +123,12 @@ class VectorDB:
             for ledger in self._dirty.values():
                 ledger.add(row)
         self._device = None  # invalidate the device snapshot
+        o = OBS.get_obs(None)
+        o.registry.counter("vectordb_records_total",
+                           "feedback records appended").inc(b)
+        o.registry.gauge("vectordb_size", "live prompt rows").set(self.size)
+        o.registry.gauge("vectordb_capacity",
+                         "allocated prompt rows").set(self.capacity)
 
     def register_consumer(self, name: str):
         """Open a dirty-row ledger for another device replica of this

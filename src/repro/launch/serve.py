@@ -15,7 +15,7 @@ from repro.serving.engine import FleetModel, Request, ServingEngine
 
 
 def build_engine(n_fleet: int = 4, dim: int = 64, seed: int = 0,
-                 compare_rate: float = 0.25):
+                 compare_rate: float = 0.25, obs=None):
     names = ARCH_IDS[:n_fleet]
     corpus = make_corpus(seed=seed, n_per_dataset=60, dim=dim,
                          model_names=names,
@@ -30,7 +30,7 @@ def build_engine(n_fleet: int = 4, dim: int = 64, seed: int = 0,
     oracle = lambda emb, mi: float(np.random.default_rng(
         abs(hash((emb[:2].tobytes(), mi))) % 2**32).random())
     engine = ServingEngine(fleet, router, compare_rate=compare_rate,
-                           seed=seed, quality_oracle=oracle)
+                           seed=seed, quality_oracle=oracle, obs=obs)
     return engine, corpus
 
 

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.core.dispatch import RouteDispatcher
 from repro.core.router import EagleRouter
 from repro.core.state import DoubleBuffer
@@ -96,21 +97,68 @@ class ServingEngine:
                  compare_rate: float = 0.2, seed: int = 0,
                  quality_oracle: Optional[Callable] = None,
                  dispatcher: Optional[RouteDispatcher] = None,
-                 warmup_batch_sizes: Optional[Sequence[int]] = None):
+                 warmup_batch_sizes: Optional[Sequence[int]] = None,
+                 obs: Optional[OBS.Observability] = None):
         assert list(fleet) == router.model_names, "fleet/router order mismatch"
         self.fleet = fleet
         self.router = router
         self.compare_rate = compare_rate
         self.rng = np.random.default_rng(seed)
         self.quality_oracle = quality_oracle  # (emb, model_idx) -> quality
-        self.dispatch = dispatcher or RouteDispatcher.for_router(router)
+        # one telemetry scope threads through every layer the engine
+        # owns: dispatcher spans/metrics, double-buffer commit stats,
+        # router feedback magnitude, and the engine's own serve spans
+        self.obs = OBS.get_obs(obs)
+        router.obs = self.obs
+        self.dispatch = dispatcher or RouteDispatcher.for_router(
+            router, obs=self.obs)
         # two device replicas over the router's host buffer: route on
         # the front while commits scatter into the back, then swap
-        self.dbuf = DoubleBuffer(router.db, router.global_ratings)
-        self.stats = {"served": 0, "feedback": 0, "commits": 0,
-                      "per_model": {m: 0 for m in fleet}}
+        self.dbuf = DoubleBuffer(router.db, router.global_ratings,
+                                 obs=self.obs)
+        # typed serve metrics (the old ad-hoc `stats` dict, now a
+        # registry; the `.stats` property keeps the legacy readout)
+        r = self.obs.registry
+        self._m_served = r.counter("serve_requests_total",
+                                   "requests served")
+        self._m_steps = r.counter("serve_steps_total", "serve() batches")
+        self._m_feedback = r.counter("serve_feedback_total",
+                                     "online comparisons collected")
+        self._m_commits = r.counter("serve_commits_total",
+                                    "router commits from the serve path")
+        self._m_per_model = {
+            m: r.counter("serve_model_requests_total",
+                         "requests served per fleet model", model=m)
+            for m in fleet}
+        self._g_queue = r.gauge("serve_queue_depth",
+                                "requests in the current serve() batch")
+        self._h_route = r.histogram("serve_route_us",
+                                    "routing latency per batch")
+        self._h_generate = r.histogram("serve_generate_us",
+                                       "per-model-group generate latency")
+        self._h_feedback = r.histogram("serve_feedback_us",
+                                       "feedback append+ELO-fold latency")
+        self._h_commit = r.histogram("serve_commit_us",
+                                     "double-buffer commit latency")
+        self._sorted_costs = np.sort(np.asarray(router.costs, np.float32))
         if warmup_batch_sizes is not None:
             self.warmup(warmup_batch_sizes)
+
+    @property
+    def stats(self) -> Dict:
+        """Legacy readout of the typed metrics (kept for callers of the
+        pre-registry ad-hoc dict; mutations are meaningless now)."""
+        return {
+            "served": int(self._m_served.value),
+            "feedback": int(self._m_feedback.value),
+            "commits": int(self._m_commits.value),
+            "per_model": {m: int(c.value)
+                          for m, c in self._m_per_model.items()},
+        }
+
+    def metrics_snapshot(self) -> Dict:
+        """Full JSON snapshot of this engine's telemetry scope."""
+        return self.obs.registry.json_snapshot()
 
     def warmup(self, batch_sizes: Optional[Sequence[int]] = None) -> int:
         """Pre-bake the dispatch cache's bucket ladder (and one commit
@@ -123,59 +171,103 @@ class ServingEngine:
         return n
 
     def serve(self, requests: Sequence[Request]) -> List[Response]:
-        t0 = time.perf_counter()
-        embs = np.stack([r.embedding for r in requests])
-        budgets = np.asarray([r.budget for r in requests], np.float32)
-        # ②/③ the whole routing hot path (similarity -> replay -> budget
-        # masking in the kernel epilogue) is ONE bucketed dispatch of a
-        # pre-compiled executable over the FRONT buffer; the single host
-        # readout is the final per-request choice
-        choices = self.dispatch.route(self.dbuf.front, embs, budgets)
-        route_dt = time.perf_counter() - t0
+        obs = self.obs
+        self._m_steps.inc()
+        self._g_queue.set(len(requests))
+        with obs.span("serve.step"):
+            t0 = time.perf_counter()
+            embs = np.stack([r.embedding for r in requests])
+            budgets = np.asarray([r.budget for r in requests], np.float32)
+            # ②/③ the whole routing hot path (similarity -> replay ->
+            # budget masking in the kernel epilogue) is ONE bucketed
+            # dispatch of a pre-compiled executable over the FRONT
+            # buffer; the single host readout is the per-request choice
+            with obs.span("serve.route"):
+                choices = self.dispatch.route(self.dbuf.front, embs,
+                                              budgets)
+            route_dt = time.perf_counter() - t0
+            self._h_route.observe(route_dt * 1e6)
+            if obs.enabled:
+                self._emit_decisions(requests, budgets, choices)
 
-        # ④ group by chosen model, pad to a batch, generate. Each group
-        # is timed separately: a request's latency is routing + its OWN
-        # group's generation, not the sum of every earlier group's.
-        responses: List[Response] = [None] * len(requests)  # type: ignore
-        for mi, name in enumerate(self.router.model_names):
-            sel = np.nonzero(choices == mi)[0]
-            if sel.size == 0:
-                continue
-            max_s = max(len(requests[i].tokens) for i in sel)
-            toks = np.zeros((sel.size, max_s), np.int32)
-            for row, i in enumerate(sel):
-                t = requests[i].tokens
-                toks[row, :len(t)] = t
-            max_new = max(requests[i].max_new_tokens for i in sel)
-            tg = time.perf_counter()
-            gen = self.fleet[name].generate(toks, max_new)
-            dt = route_dt + (time.perf_counter() - tg)
-            for row, i in enumerate(sel):
-                responses[i] = Response(requests[i].rid, name,
-                                        gen[row, :requests[i].max_new_tokens],
-                                        dt)
-                self.stats["per_model"][name] += 1
-        self.stats["served"] += len(requests)
+            # ④ group by chosen model, pad to a batch, generate. Each
+            # group is timed separately: a request's latency is routing
+            # + its OWN group's generation, not the sum of every
+            # earlier group's.
+            responses: List[Response] = [None] * len(requests)  # type: ignore
+            for mi, name in enumerate(self.router.model_names):
+                sel = np.nonzero(choices == mi)[0]
+                if sel.size == 0:
+                    continue
+                max_s = max(len(requests[i].tokens) for i in sel)
+                toks = np.zeros((sel.size, max_s), np.int32)
+                for row, i in enumerate(sel):
+                    t = requests[i].tokens
+                    toks[row, :len(t)] = t
+                max_new = max(requests[i].max_new_tokens for i in sel)
+                tg = time.perf_counter()
+                with obs.span(f"serve.generate.{name}"):
+                    gen = self.fleet[name].generate(toks, max_new)
+                gen_dt = time.perf_counter() - tg
+                self._h_generate.observe(gen_dt * 1e6)
+                dt = route_dt + gen_dt
+                for row, i in enumerate(sel):
+                    responses[i] = Response(
+                        requests[i].rid, name,
+                        gen[row, :requests[i].max_new_tokens], dt)
+                self._m_per_model[name].inc(int(sel.size))
+            self._m_served.inc(len(requests))
 
-        # ⑤ optional second-model comparison -> online router update
-        if self.quality_oracle is not None and self.compare_rate > 0:
-            cmp_sel = self.rng.random(len(requests)) < self.compare_rate
-            idxs = np.nonzero(cmp_sel)[0]
-            if idxs.size:
-                a = choices[idxs]
-                b = np.asarray([self.rng.choice(
-                    [m for m in range(len(self.fleet)) if m != ai])
-                    for ai in a], np.int32)
-                qa = np.asarray([self.quality_oracle(embs[i], int(ai))
-                                 for i, ai in zip(idxs, a)])
-                qb = np.asarray([self.quality_oracle(embs[i], int(bi))
-                                 for i, bi in zip(idxs, b)])
-                outcome = np.where(qa == qb, 0.5, (qa > qb).astype(np.float32))
-                self.router.feedback(embs[idxs], a, b, outcome)
-                self.stats["feedback"] += int(idxs.size)
-                # absorb the new rows into the BACK buffer and swap —
-                # async, so it overlaps anything still in flight on the
-                # old front (double-buffered commit protocol)
-                self.dbuf.commit(self.router.global_ratings)
-                self.stats["commits"] += 1
+            # ⑤ optional second-model comparison -> online router
+            # update. Feedback and commit are timed spans now — the
+            # pre-telemetry serve() never measured this leg at all, so
+            # the cost of the online update was invisible.
+            if self.quality_oracle is not None and self.compare_rate > 0:
+                cmp_sel = self.rng.random(len(requests)) < self.compare_rate
+                idxs = np.nonzero(cmp_sel)[0]
+                if idxs.size:
+                    a = choices[idxs]
+                    b = np.asarray([self.rng.choice(
+                        [m for m in range(len(self.fleet)) if m != ai])
+                        for ai in a], np.int32)
+                    qa = np.asarray([self.quality_oracle(embs[i], int(ai))
+                                     for i, ai in zip(idxs, a)])
+                    qb = np.asarray([self.quality_oracle(embs[i], int(bi))
+                                     for i, bi in zip(idxs, b)])
+                    outcome = np.where(qa == qb, 0.5,
+                                       (qa > qb).astype(np.float32))
+                    tf = time.perf_counter()
+                    with obs.span("serve.feedback"):
+                        self.router.feedback(embs[idxs], a, b, outcome)
+                    self._h_feedback.observe(
+                        (time.perf_counter() - tf) * 1e6)
+                    self._m_feedback.inc(int(idxs.size))
+                    # absorb the new rows into the BACK buffer and swap
+                    # — async, so it overlaps anything still in flight
+                    # on the old front (double-buffered commit protocol)
+                    tc = time.perf_counter()
+                    with obs.span("serve.commit"):
+                        self.dbuf.commit(self.router.global_ratings)
+                    self._h_commit.observe(
+                        (time.perf_counter() - tc) * 1e6)
+                    self._m_commits.inc()
         return responses
+
+    def _emit_decisions(self, requests: Sequence[Request], budgets,
+                        choices):
+        """One JSONL record per routed request: the offline AUC/cost
+        analysis input (chosen model, budget, feasible-set size)."""
+        # feasible-set size = #models with cost <= budget, via one
+        # searchsorted over the pre-sorted cost vector (O(B log M))
+        feas = np.searchsorted(self._sorted_costs, budgets, side="right")
+        names = self.router.model_names
+        nb = len(requests)
+        idx = choices.tolist()
+        self.obs.events.emit_columns(
+            "route", nb,
+            {"ts": time.time(), "batch": nb},
+            {"rid": [r.rid for r in requests],
+             "model": [names[c] for c in idx],
+             "model_idx": idx,
+             "budget": budgets.tolist(),
+             "feasible": feas.tolist()})

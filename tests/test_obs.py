@@ -1,0 +1,323 @@
+"""Observability substrate tests (DESIGN.md §9): span tracer semantics
+(nesting, ordering, ring wraparound), metrics registry correctness
+(histogram quantiles vs numpy, concurrent-writer exactness), exposition
+formats (Prometheus text, Chrome-trace JSON, JSONL), the CompileCounter
+concurrency regression, and the serving-path integration (typed
+engine stats, per-request decision log, feedback/commit timing)."""
+import json
+import re
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs as OBS
+from repro.obs.events import EventLog
+from repro.obs.metrics import Histogram, MetricsRegistry, geometric_bounds
+from repro.obs.trace import NULL_SPAN, SpanTracer
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_ordering():
+    tr = SpanTracer(capacity=64)
+    with tr.span("outer"):
+        with tr.span("mid"):
+            with tr.span("inner"):
+                pass
+        with tr.span("mid2"):
+            pass
+    spans = tr.spans()
+    assert [s[1] for s in spans] == ["inner", "mid", "mid2", "outer"]
+    by_name = {s[1]: s for s in spans}
+    # depths reflect nesting
+    assert by_name["outer"][5] == 0
+    assert by_name["mid"][5] == by_name["mid2"][5] == 1
+    assert by_name["inner"][5] == 2
+    # children are contained in the parent interval
+    for child in ("mid", "mid2", "inner"):
+        c0 = by_name[child][2]
+        c1 = c0 + by_name[child][3]
+        o0 = by_name["outer"][2]
+        o1 = o0 + by_name["outer"][3]
+        assert o0 <= c0 and c1 <= o1
+    # mid closes before mid2 opens (sequential siblings)
+    assert by_name["mid"][2] + by_name["mid"][3] <= by_name["mid2"][2]
+
+
+def test_ring_buffer_wraparound():
+    tr = SpanTracer(capacity=8)
+    for i in range(20):
+        with tr.span(f"s{i}"):
+            pass
+    assert tr.recorded == 20
+    assert tr.dropped == 12
+    spans = tr.spans()
+    assert len(spans) == 8
+    # retained spans are exactly the 8 most recent, in seq order
+    assert [s[0] for s in spans] == list(range(12, 20))
+    assert [s[1] for s in spans] == [f"s{i}" for i in range(12, 20)]
+
+
+def test_disabled_tracer_records_nothing():
+    tr = SpanTracer(capacity=8)
+    tr.enabled = False
+    sp = tr.span("x")
+    assert sp is NULL_SPAN
+    with sp:
+        pass
+    assert tr.recorded == 0 and tr.spans() == []
+
+
+def test_concurrent_span_writers_exact_count():
+    tr = SpanTracer(capacity=100_000)
+    n_threads, per_thread = 8, 2000
+
+    def work():
+        for i in range(per_thread):
+            with tr.span("t"):
+                pass
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tr.recorded == n_threads * per_thread
+    spans = tr.spans()
+    assert len(spans) == n_threads * per_thread
+    # no torn records: every span well-formed with non-negative duration
+    assert all(s[1] == "t" and s[3] >= 0 for s in spans)
+    # seqs are unique
+    assert len({s[0] for s in spans}) == len(spans)
+
+
+def test_chrome_trace_export_valid():
+    tr = SpanTracer(capacity=64)
+    with tr.span("a"):
+        with tr.span("b"):
+            pass
+    doc = json.loads(json.dumps(tr.chrome_trace()))
+    evs = doc["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"a", "b"}
+    for e in xs:
+        assert isinstance(e["ts"], float) and isinstance(e["dur"], float)
+        assert e["dur"] >= 0 and "pid" in e and "tid" in e
+    # metadata event for the process name is present (Perfetto niceness)
+    assert any(e.get("ph") == "M" for e in evs)
+
+
+def test_save_chrome_trace_loads(tmp_path):
+    tr = SpanTracer(capacity=16)
+    with tr.span("route"):
+        pass
+    p = tr.save_chrome_trace(tmp_path / "trace.json")
+    doc = json.loads(open(p).read())
+    assert doc["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantiles_vs_numpy_lognormal():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(mean=7.0, sigma=1.2, size=5000)
+    h = Histogram("lat", bounds=geometric_bounds(1.0, 1e7, 1.25))
+    for x in xs:
+        h.observe(x)
+    for q in (0.50, 0.90, 0.99):
+        ref = float(np.percentile(xs, q * 100))
+        est = h.quantile(q)
+        # geometric buckets at 1.25x + interpolation: stay well inside
+        # one bucket width of the sample quantile
+        assert abs(est - ref) / ref < 0.25, (q, est, ref)
+
+
+def test_histogram_quantiles_vs_numpy_uniform_linear_buckets():
+    rng = np.random.default_rng(1)
+    xs = rng.uniform(0.0, 1000.0, size=4000)
+    h = Histogram("u", bounds=[float(b) for b in range(10, 1011, 10)])
+    for x in xs:
+        h.observe(x)
+    for q in (0.25, 0.50, 0.75, 0.90, 0.99):
+        ref = float(np.percentile(xs, q * 100))
+        assert abs(h.quantile(q) - ref) <= 10.0 + 1e-6  # one bucket
+    assert h.count == 4000
+    np.testing.assert_allclose(h.sum, xs.sum(), rtol=1e-9)
+    assert h.min == xs.min() and h.max == xs.max()
+
+
+def test_histogram_edge_cases():
+    h = Histogram("e", bounds=[1.0, 2.0])
+    assert np.isnan(h.quantile(0.5))
+    h.observe(5.0)  # overflow bucket
+    assert h.quantile(0.5) == 5.0
+    assert h.bucket_counts()[-1] == (np.inf, 1)
+
+
+def test_concurrent_counter_writers_exact_total():
+    r = MetricsRegistry()
+    c = r.counter("hits_total")
+    h = r.histogram("obs_us", bounds=[10.0, 100.0, 1000.0])
+    n_threads, per_thread = 8, 5000
+
+    def work():
+        for i in range(per_thread):
+            c.inc()
+            h.observe(float(i % 500))
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * per_thread
+    assert h.count == n_threads * per_thread
+    assert h.bucket_counts()[-1][1] == n_threads * per_thread
+
+
+def test_registry_get_or_create_and_labels():
+    r = MetricsRegistry()
+    a = r.counter("served_total", model="m0")
+    b = r.counter("served_total", model="m0")
+    c = r.counter("served_total", model="m1")
+    assert a is b and a is not c
+    a.inc(3)
+    c.inc(1)
+    assert r.value("served_total", model="m0") == 3
+    assert r.value("served_total", model="m1") == 1
+    assert r.value("missing", default=None) is None
+
+
+_PROM_SAMPLE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [^ ]+$")
+
+
+def test_prometheus_exposition_parses():
+    r = MetricsRegistry()
+    r.counter("req_total", "requests", model="a").inc(5)
+    r.counter("req_total", model="b").inc(2)
+    r.gauge("depth", "queue depth").set(3)
+    r.gauge("compiles", fn=lambda: 7)
+    h = r.histogram("lat_us", "latency", bounds=[1.0, 10.0, 100.0])
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    text = r.prometheus_text()
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            assert re.match(r"^# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* ",
+                            line), line
+        else:
+            assert _PROM_SAMPLE.match(line), line
+    # histogram series complete: +Inf bucket, _sum, _count
+    assert 'lat_us_bucket{le="+Inf"} 4' in text
+    assert "lat_us_count 4" in text
+    # cumulative bucket counts are monotonic
+    cums = [int(m.group(1)) for m in
+            re.finditer(r'lat_us_bucket\{le="[^"]+"\} (\d+)', text)]
+    assert cums == sorted(cums)
+    # callback gauge sampled at scrape time
+    assert "compiles 7" in text
+
+
+def test_json_snapshot_shape():
+    r = MetricsRegistry()
+    r.counter("c_total").inc(2)
+    r.gauge("g").set(1.5)
+    h = r.histogram("h_us", bounds=[1.0, 10.0])
+    h.observe(3.0)
+    snap = r.json_snapshot()
+    assert snap["counters"]["c_total"] == 2
+    assert snap["gauges"]["g"] == 1.5
+    hs = snap["histograms"]["h_us"]
+    assert hs["count"] == 1 and {"p50", "p90", "p99"} <= set(hs)
+
+
+# ---------------------------------------------------------------------------
+# event log
+# ---------------------------------------------------------------------------
+
+def test_event_log_emit_and_dump(tmp_path):
+    log = EventLog(capacity=100)
+    for i in range(5):
+        log.emit({"kind": "x", "i": i})
+    log.emit_many([{"kind": "y", "i": i} for i in range(3)])
+    log.emit_columns("route", 4, {"batch": 4},
+                     {"rid": range(4), "model_idx": [0, 1, 2, 3]})
+    assert log.emitted == 12 and len(log) == 12 and log.dropped == 0
+    recs = log.records()
+    assert len(recs) == 12
+    assert [r["rid"] for r in log.records("route")] == [0, 1, 2, 3]
+    p = tmp_path / "events.jsonl"
+    assert log.dump(p) == 12
+    lines = p.read_text().splitlines()
+    assert len(lines) == 12
+    parsed = [json.loads(l) for l in lines]
+    assert parsed[-1] == {"kind": "route", "batch": 4, "rid": 3,
+                          "model_idx": 3}
+
+
+def test_event_log_bounded():
+    log = EventLog(capacity=4)
+    for i in range(10):
+        log.emit({"i": i})
+    assert log.emitted == 10 and len(log) == 4 and log.dropped == 6
+    assert [r["i"] for r in log.records()] == [6, 7, 8, 9]
+
+
+def test_event_log_streaming(tmp_path):
+    p = tmp_path / "stream.jsonl"
+    log = EventLog(capacity=2, path=str(p))
+    for i in range(5):
+        log.emit({"i": i})
+    log.emit_columns("r", 2, {}, {"j": [0, 1]})
+    log.close()
+    lines = [json.loads(l) for l in p.read_text().splitlines()]
+    # the stream saw every record even though the ring kept only 2
+    assert len(lines) == 7
+
+
+# ---------------------------------------------------------------------------
+# Observability bundle gating
+# ---------------------------------------------------------------------------
+
+def test_bundle_gating():
+    ob = OBS.Observability(enabled=False)
+    with ob.span("x"):
+        pass
+    assert not ob.emit({"kind": "x"})
+    assert ob.tracer.recorded == 0 and ob.events.emitted == 0
+    ob.enable()
+    with ob.span("y"):
+        pass
+    assert ob.emit({"kind": "y"})
+    assert ob.tracer.recorded == 1 and ob.events.emitted == 1
+    ob.disable()
+    assert ob.span("z") is OBS.NULL_SPAN
+
+
+# ---------------------------------------------------------------------------
+# CompileCounter concurrency regression
+# ---------------------------------------------------------------------------
+
+def test_compile_counter_concurrent_events_exact():
+    from repro.core import dispatch as D
+    n_threads, per_thread = 8, 2000
+    start = D.xla_compile_count()
+
+    def hammer():
+        for _ in range(per_thread):
+            D._on_event(D._COMPILE_EVENT)
+            D._on_event("/some/other/event")  # must not count
+
+    cc = D.CompileCounter()
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert cc.delta() == n_threads * per_thread
+    assert D.xla_compile_count() - start == n_threads * per_thread
