@@ -1,0 +1,305 @@
+"""Open-loop admission/queueing benchmark: end-to-end latency (queue
+wait + route + generate), bucket occupancy, and goodput vs offered load
+through the admission frontend (serving/admission.py, DESIGN.md §10).
+
+  PYTHONPATH=src python -m benchmarks.queue_bench [--smoke]
+  PYTHONPATH=src python -m benchmarks.queue_bench --smoke --assert-queue
+
+The harness is the discrete-event open-loop driver (serving/traffic.py):
+seeded Poisson / Gamma-burst / replayed arrivals land on a virtual
+clock, the AdmissionQueue coalesces them into dispatch-bucket windows,
+and a SimServer backend runs the REAL bucketed routing dispatch (so XLA
+compile counting and occupancy telemetry are live) with generation
+modelled as a cost-proportional service time — cheap models are fast,
+which is what makes the overload budget clamp raise the service rate.
+
+Offered load is calibrated against the measured service model: load 1.0
+is the arrival rate that exactly saturates a full coalescing window.
+
+Scenarios (all merged into BENCH_queue.json at the repo root):
+  * goodput sweep  — Poisson at several sub/supercritical loads;
+  * burst          — Gamma arrivals (cv=3) at moderate load;
+  * replay         — the steady trace replayed through the replay path;
+  * steady (gate)  — fixed 0.6 load; `--assert-queue` requires ZERO
+    post-warmup XLA compiles, zero rejects/sheds, p99 queue wait under
+    the request deadline, and mean bucket occupancy >= 60%;
+  * overload (gate)— 2x offered load for 500 windows; the shed policy
+    must keep the queue depth stationary (no monotonic growth) with
+    zero rejects.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common as C
+from repro import obs as OBS
+from repro.core.dispatch import (MIN_BUCKET, CompileCounter,
+                                 RouteDispatcher)
+from repro.serving import traffic as TR
+from repro.serving.admission import AdmissionConfig, AdmissionQueue
+from repro.serving.engine import Request
+
+#: committed artifact (results/ is gitignored; this one is the record)
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_queue.json"
+
+WINDOW = 32            # coalescing window == dispatch bucket target
+MAX_WAIT_MS = 5.0      # coalescing deadline slack
+DEADLINE_MS = 50.0     # per-request end-to-end deadline
+WATERMARK = 4 * WINDOW
+REJECT_CAP = 16 * WINDOW
+OVERLOAD_STEPS = 500   # full windows in the overload run (acceptance)
+
+
+def _build_world(smoke: bool, obs=None):
+    n_per = 60 if smoke else C.N_PER_DATASET
+    corpus, fb = C.build(seed=0, n_per_dataset=n_per)
+    router, _ = C.fit_eagle(corpus, fb)
+    dispatch = RouteDispatcher.for_router(router, max_bucket=WINDOW,
+                                          obs=obs)
+    server = TR.SimServer(dispatch, router.state, router.model_names,
+                          corpus.costs, base_us=500.0, per_cost_us=12.0)
+    return corpus, router, dispatch, server
+
+
+def _requests(corpus, n: int, seed: int,
+              deadline_ms: float = DEADLINE_MS,
+              hi_prio_frac: float = 0.1):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(corpus.embeddings), n)
+    budgets = rng.uniform(float(corpus.costs.min()),
+                          float(corpus.costs.max()), n)
+    prios = (rng.random(n) < hi_prio_frac).astype(np.int64)
+    empty = np.empty(0, np.int32)
+    return [Request(tokens=empty, embedding=corpus.embeddings[i],
+                    budget=float(b), rid=k, deadline_ms=deadline_ms,
+                    priority=int(p))
+            for k, (i, b, p) in enumerate(zip(idx, budgets, prios))]
+
+
+def calibrate_capacity_hz(server, corpus, seed: int = 123) -> float:
+    """Requests/sec at which full coalescing windows exactly saturate
+    the service model: one real routed window, priced by the model."""
+    reqs = _requests(corpus, WINDOW, seed)
+    embs = np.stack([r.embedding for r in reqs])
+    budgets = np.asarray([r.budget for r in reqs], np.float32)
+    choices = server.dispatch.route(server.state, embs, budgets)
+    return WINDOW / server.batch_service_s(choices)
+
+
+def _depth_stationarity(depth_series):
+    """(max_depth, mid_mean, tail_mean) over the flush-sampled depth
+    series, thirds by index — a growing queue shows tail >> mid."""
+    d = np.asarray([x[1] for x in depth_series], np.float64)
+    if d.size < 9:
+        return (float(d.max(initial=0.0)), 0.0, 0.0)
+    third = d.size // 3
+    return (float(d.max()), float(d[third:2 * third].mean()),
+            float(d[2 * third:].mean()))
+
+
+def run_scenario(server, dispatch, corpus, *, name: str, kind: str,
+                 load: float, capacity_hz: float, n_arrivals: int,
+                 seed: int = 7, arrivals=None):
+    """One open-loop run; returns the scenario's summary payload."""
+    ob = OBS.Observability(enabled=False)   # fresh counters per scenario
+    cfg = AdmissionConfig(window_bucket=WINDOW, max_wait_ms=MAX_WAIT_MS,
+                          shed_watermark=WATERMARK, reject_cap=REJECT_CAP,
+                          min_bucket=dispatch.min_bucket,
+                          max_bucket=dispatch.max_bucket)
+    queue = AdmissionQueue(server.serve, cfg, obs=ob)
+    reqs = _requests(corpus, n_arrivals, seed)
+    rate_hz = load * capacity_hz
+    if arrivals is None:
+        arrivals = TR.make_arrivals(kind, rate_hz, n_arrivals, seed=seed)
+    tel0 = dispatch.telemetry()
+    t_wall = time.perf_counter()
+    with CompileCounter() as cc:
+        res = TR.OpenLoopDriver(queue, reqs, arrivals).run()
+    wall_s = time.perf_counter() - t_wall
+    compiles = cc.delta()
+    tel1 = dispatch.telemetry()
+    rows = tel1["rows"] - tel0["rows"]
+    padded = tel1["padded_rows"] - tel0["padded_rows"]
+    wait, e2e = res.wait_us(), res.e2e_us()
+    summ = queue.summary()
+    depth_max, depth_mid, depth_tail = _depth_stationarity(
+        res.depth_series)
+    prio_wait = {}
+    for p in (0, 1):
+        w = np.asarray([c.wait_us for c in res.completed
+                        if c.priority == p])
+        if w.size:
+            prio_wait[f"p{p}_wait_p50_us"] = float(np.percentile(w, 50))
+    return {
+        "name": name, "kind": kind, "load": load,
+        "offered_hz": rate_hz, "offered": res.offered,
+        "completed": len(res.completed),
+        "rejected": len(res.rejections),
+        "shed": summ["shed"],
+        "flushes": summ["flushes"],
+        "wait_p50_us": float(np.percentile(wait, 50)),
+        "wait_p99_us": float(np.percentile(wait, 99)),
+        "e2e_p50_us": float(np.percentile(e2e, 50)),
+        "e2e_p99_us": float(np.percentile(e2e, 99)),
+        "goodput_hz": res.goodput_hz(DEADLINE_MS),
+        "occupancy_mean": rows / padded if padded else 0.0,
+        "depth_max": depth_max,
+        "depth_mid_mean": depth_mid,
+        "depth_tail_mean": depth_tail,
+        "post_warmup_xla_compiles": compiles,
+        "virtual_horizon_s": res.horizon_ns / 1e9,
+        "wall_s": wall_s,
+        **prio_wait,
+    }
+
+
+def _merge_bench_json(update: dict):
+    payload = {}
+    if BENCH_JSON.exists():
+        try:
+            payload = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            payload = {}
+    payload.update(update)
+    BENCH_JSON.write_text(json.dumps(payload, indent=1, default=float))
+    return payload
+
+
+def run(verbose: bool = True, smoke: bool = False,
+        assert_queue: bool = False):
+    ob = OBS.Observability(enabled=False)
+    corpus, router, dispatch, server = _build_world(smoke, obs=ob)
+    t0 = time.perf_counter()
+    warm_routes = dispatch.warmup(router.state)   # full ladder pre-bake
+    warm_s = time.perf_counter() - t0
+    capacity_hz = calibrate_capacity_hz(server, corpus)
+
+    n_steady = (6000 if smoke else 12000)
+    scenarios = {}
+
+    def add(s):
+        scenarios[s["name"]] = s
+        if verbose:
+            print(f"[queue_bench] {s['name']:18s} load={s['load']:.1f} "
+                  f"offered={s['offered']} completed={s['completed']} "
+                  f"shed={s['shed']} rejected={s['rejected']} "
+                  f"wait_p99={s['wait_p99_us'] / 1e3:7.2f}ms "
+                  f"e2e_p99={s['e2e_p99_us'] / 1e3:7.2f}ms "
+                  f"occ={s['occupancy_mean']:.2f} "
+                  f"goodput={s['goodput_hz']:.0f}/s "
+                  f"compiles={s['post_warmup_xla_compiles']}")
+
+    # goodput sweep: sub- to supercritical Poisson
+    for load in (0.4, 0.8, 1.2):
+        add(run_scenario(server, dispatch, corpus,
+                         name=f"poisson_L{load:.1f}", kind="poisson",
+                         load=load, capacity_hz=capacity_hz,
+                         n_arrivals=2048, seed=11))
+
+    # bursty arrivals at moderate load (the coalescing window's case)
+    add(run_scenario(server, dispatch, corpus, name="burst_L0.8",
+                     kind="burst", load=0.8, capacity_hz=capacity_hz,
+                     n_arrivals=2048, seed=12))
+
+    # the steady gate scenario: fixed subcritical offered load
+    steady = run_scenario(server, dispatch, corpus, name="steady_L0.6",
+                          kind="poisson", load=0.6,
+                          capacity_hz=capacity_hz,
+                          n_arrivals=n_steady, seed=13)
+    add(steady)
+
+    # replay: the steady trace re-driven through the replay path
+    steady_arr = TR.make_arrivals("poisson", 0.6 * capacity_hz,
+                                  2048, seed=13)
+    add(run_scenario(server, dispatch, corpus, name="replay_steady",
+                     kind="replay", load=0.6, capacity_hz=capacity_hz,
+                     n_arrivals=2048, seed=13,
+                     arrivals=TR.replay_arrivals(steady_arr / 1e9)))
+
+    # the overload gate scenario: 2x capacity for OVERLOAD_STEPS windows
+    overload = run_scenario(server, dispatch, corpus, name="overload_L2.0",
+                            kind="poisson", load=2.0,
+                            capacity_hz=capacity_hz,
+                            n_arrivals=OVERLOAD_STEPS * WINDOW, seed=14)
+    add(overload)
+
+    payload = {
+        "smoke": smoke,
+        "window_bucket": WINDOW,
+        "max_wait_ms": MAX_WAIT_MS,
+        "deadline_ms": DEADLINE_MS,
+        "shed_watermark": WATERMARK,
+        "reject_cap": REJECT_CAP,
+        "capacity_hz": capacity_hz,
+        "warmup_s": warm_s,
+        "warmup_route_executables": warm_routes,
+        # what per-request dispatch would score on the same ladder
+        "per_request_occupancy": 1.0 / MIN_BUCKET,
+        "scenarios": scenarios,
+        "dispatch_telemetry": dispatch.telemetry(),
+        "metrics": ob.registry.json_snapshot(),
+    }
+    _merge_bench_json(payload)
+    C.save_json("queue_bench.json", payload)
+
+    if assert_queue:
+        errs = []
+        for s in (steady, overload):
+            if s["post_warmup_xla_compiles"] != 0:
+                errs.append(f"{s['name']}: {s['post_warmup_xla_compiles']}"
+                            " XLA compile(s) after warmup (expected 0)")
+            if s["rejected"] != 0:
+                errs.append(f"{s['name']}: {s['rejected']} rejects "
+                            "(expected 0)")
+        if steady["shed"] != 0:
+            errs.append(f"steady: {steady['shed']} sheds below the "
+                        "watermark (expected 0)")
+        if steady["wait_p99_us"] > DEADLINE_MS * 1e3:
+            errs.append(f"steady: p99 queue wait "
+                        f"{steady['wait_p99_us'] / 1e3:.2f}ms exceeds the "
+                        f"{DEADLINE_MS:.0f}ms deadline")
+        if steady["occupancy_mean"] < 0.60:
+            errs.append(f"steady: mean bucket occupancy "
+                        f"{steady['occupancy_mean']:.2f} < 0.60")
+        if overload["depth_tail_mean"] > \
+                overload["depth_mid_mean"] * 1.25 + 2.0:
+            errs.append(
+                f"overload: queue depth grows monotonically "
+                f"(mid={overload['depth_mid_mean']:.1f} -> "
+                f"tail={overload['depth_tail_mean']:.1f})")
+        if errs:
+            raise SystemExit("queue gate violation(s):\n  "
+                             + "\n  ".join(errs))
+        if verbose:
+            print("[queue_bench] gate OK: 0 compiles, 0 rejects, "
+                  f"p99 wait {steady['wait_p99_us'] / 1e3:.2f}ms <= "
+                  f"{DEADLINE_MS:.0f}ms, occupancy "
+                  f"{steady['occupancy_mean']:.2f} >= 0.60, overload "
+                  f"depth stationary "
+                  f"({overload['depth_mid_mean']:.1f} -> "
+                  f"{overload['depth_tail_mean']:.1f})")
+
+    rows = [(f"queue_{s['name']}", s["e2e_p50_us"],
+             f"p99={s['e2e_p99_us']:.0f}us|occ={s['occupancy_mean']:.2f}"
+             f"|goodput={s['goodput_hz']:.0f}/s|shed={s['shed']}"
+             f"|rej={s['rejected']}")
+            for s in scenarios.values()]
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus (CI smoke); the overload gate "
+                         "keeps its full 500 windows")
+    ap.add_argument("--assert-queue", action="store_true",
+                    help="gate: 0 post-warmup compiles, 0 rejects/sheds "
+                         "below the watermark, p99 wait under deadline, "
+                         "occupancy >= 60%%, overload depth stationary")
+    args = ap.parse_args()
+    run(smoke=args.smoke, assert_queue=args.assert_queue)

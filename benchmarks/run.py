@@ -73,6 +73,11 @@ def main():
     for n, us, d in route_batch_bench.run(smoke=args.quick):
         rows.append((n, us, d))
 
+    section("Admission queue — coalescing, backpressure, goodput")
+    from benchmarks import queue_bench
+    for n, us, d in queue_bench.run(smoke=args.quick):
+        rows.append((n, us, d))
+
     section("Kernel microbenchmarks")
     from benchmarks import kernels_bench
     for n, us, d in kernels_bench.run():

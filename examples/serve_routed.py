@@ -3,13 +3,15 @@ route -> batch per model -> prefill+decode -> optional second-opinion
 feedback folded back into the router online.
 
   PYTHONPATH=src python examples/serve_routed.py --requests 24
+  PYTHONPATH=src python examples/serve_routed.py --arrival poisson --rate 2000
 """
 import argparse
 
 import numpy as np
 
-from repro.launch.serve import build_engine
+from repro.launch.serve import build_admission, build_engine
 from repro.obs import Observability
+from repro.serving import traffic as TR
 from repro.serving.engine import Request
 
 
@@ -19,6 +21,16 @@ def main():
     ap.add_argument("--fleet", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival", choices=["batch", "poisson", "burst"],
+                    default="batch",
+                    help="'batch' serves one big batch directly; "
+                         "'poisson'/'burst' stream arrivals through the "
+                         "admission queue (open-loop, virtual clock)")
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="offered load in requests/s for --arrival modes")
+    ap.add_argument("--window", type=int, default=8,
+                    help="admission coalescing window (requests)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--trace", type=str, default=None,
                     help="write a Chrome-trace JSON of the serve step here")
     args = ap.parse_args()
@@ -35,7 +47,26 @@ def main():
             for k, (i, b) in enumerate(zip(rows, budgets))]
 
     ratings_before = np.asarray(engine.router.global_ratings).copy()
-    responses = engine.serve(reqs)
+    if args.arrival == "batch":
+        responses = engine.serve(reqs)
+    else:
+        queue = build_admission(engine, window_bucket=args.window,
+                                max_wait_ms=args.max_wait_ms)
+        arrivals = TR.make_arrivals(args.arrival, args.rate,
+                                    len(reqs), seed=args.seed)
+        result = TR.OpenLoopDriver(queue, reqs, arrivals).run()
+        responses = sorted((c.response for c in result.completed),
+                           key=lambda r: r.rid)
+        waits = result.wait_us()
+        summ = queue.summary()
+        print(f"admission [{args.arrival} @ {args.rate:.0f}/s]: "
+              f"{summ['flushed']} served over {len(queue.flush_log)} "
+              f"windows {dict(summ['flushes'])}, "
+              f"shed={summ['shed']} rejected={summ['rejected']}")
+        print(f"queue wait: p50={np.percentile(waits, 50):.0f}us "
+              f"p99={np.percentile(waits, 99):.0f}us  "
+              f"window fill: "
+              f"{np.mean([f.n / f.bucket for f in queue.flush_log]):.2f}\n")
     ratings_after = np.asarray(engine.router.global_ratings)
 
     print("responses (first 8):")

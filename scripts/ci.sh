@@ -18,6 +18,14 @@
 # estimator), trigger zero compiles, and produce parseable artifacts
 # (Prometheus text, Chrome-trace JSON, decision JSONL with one record
 # per routed request). --assert-obs exits non-zero on any violation.
+#
+# The queue gate (DESIGN.md §10) holds the admission frontend to its
+# contract: at steady load, zero post-warmup compiles (windows land on
+# the warmed bucket ladder), zero shed/rejected requests, p99 queue
+# wait under the deadline, and mean window occupancy >= 60%; under 2x
+# overload the shed clamp must keep queue depth stationary (no
+# monotonic growth) with still zero rejects. --assert-queue exits
+# non-zero on any violation and merges results into BENCH_queue.json.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -38,5 +46,10 @@ echo
 echo "===== telemetry overhead gate (<5% p50, artifacts parse) ====="
 python -m benchmarks.route_batch_bench --smoke \
     --assert-obs || status=$((status ? status : $?))
+
+echo
+echo "===== admission queue gate (0 compiles, bounded overload) ====="
+python -m benchmarks.queue_bench --smoke \
+    --assert-queue || status=$((status ? status : $?))
 
 exit "$status"

@@ -300,35 +300,63 @@ class RouteDispatcher:
         self._bucket_counter(qb).inc()
 
     # -- the hot path --------------------------------------------------------
-    def route(self, state: RouterState, query_embs, budgets) -> np.ndarray:
-        """Bucket-pad, dispatch the cached executable, slice. Returns
-        host (Q,) int32 choices — the single readout of a routing step."""
-        q = np.atleast_2d(np.asarray(query_embs, np.float32))
+    def _chunks(self, nq: int):
+        """(lo, hi) spans of at most max_bucket rows. Routing is
+        row-independent, so an oversized batch is dispatched as
+        ladder-sized chunks — an off-ladder padded shape would silently
+        miss the warmed cache and compile on the hot path."""
+        return [(lo, min(lo + self.max_bucket, nq))
+                for lo in range(0, nq, self.max_bucket)]
+
+    def _route_one(self, state: RouterState, q: np.ndarray,
+                   b: np.ndarray) -> np.ndarray:
         nq = q.shape[0]
         qb = self.bucket(nq)
         self._record_dispatch(nq, qb)
         with self.obs.span("dispatch.route"):
             if qb != nq:
                 q = np.pad(q, ((0, qb - nq), (0, 0)))
-            b = np.broadcast_to(np.asarray(budgets, np.float32),
-                                (nq,)).astype(np.float32)
-            if qb != nq:
                 b = np.pad(b, (0, qb - nq))
             res = self._compiled(state, qb)(state, q, b, self.costs)
             return np.asarray(res.choices)[:nq]
 
-    def route_result(self, state: RouterState, query_embs, budgets):
-        """Bucketed dispatch returning (choices (Q,), topk_idx (Q, n))
-        as host arrays, for callers that want the retrieval trace."""
+    def route(self, state: RouterState, query_embs, budgets) -> np.ndarray:
+        """Bucket-pad, dispatch the cached executable, slice. Returns
+        host (Q,) int32 choices — the single readout of a routing step.
+        Batches beyond max_bucket are chunked into ladder-sized
+        dispatches (never an off-ladder compile)."""
         q = np.atleast_2d(np.asarray(query_embs, np.float32))
+        nq = q.shape[0]
+        b = np.broadcast_to(np.asarray(budgets, np.float32),
+                            (nq,)).astype(np.float32)
+        if nq <= self.max_bucket:
+            return self._route_one(state, q, b)
+        return np.concatenate([self._route_one(state, q[lo:hi], b[lo:hi])
+                               for lo, hi in self._chunks(nq)])
+
+    def _route_result_one(self, state: RouterState, q: np.ndarray,
+                          b: np.ndarray):
         nq = q.shape[0]
         qb = self.bucket(nq)
         self._record_dispatch(nq, qb)
         with self.obs.span("dispatch.route_result"):
             qp = np.pad(q, ((0, qb - nq), (0, 0))) if qb != nq else q
-            b = np.broadcast_to(np.asarray(budgets, np.float32),
-                                (nq,)).astype(np.float32)
             bp = np.pad(b, (0, qb - nq)) if qb != nq else b
             res = self._compiled(state, qb)(state, qp, bp, self.costs)
             return (np.asarray(res.choices)[:nq],
                     np.asarray(res.topk_idx)[:nq])
+
+    def route_result(self, state: RouterState, query_embs, budgets):
+        """Bucketed dispatch returning (choices (Q,), topk_idx (Q, n))
+        as host arrays, for callers that want the retrieval trace.
+        Chunks oversized batches like route()."""
+        q = np.atleast_2d(np.asarray(query_embs, np.float32))
+        nq = q.shape[0]
+        b = np.broadcast_to(np.asarray(budgets, np.float32),
+                            (nq,)).astype(np.float32)
+        if nq <= self.max_bucket:
+            return self._route_result_one(state, q, b)
+        parts = [self._route_result_one(state, q[lo:hi], b[lo:hi])
+                 for lo, hi in self._chunks(nq)]
+        return (np.concatenate([p[0] for p in parts]),
+                np.concatenate([p[1] for p in parts]))

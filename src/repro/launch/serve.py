@@ -1,16 +1,19 @@
 """Serving launcher: Eagle-routed multi-LLM fleet (reduced configs on CPU).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --fleet 4
+  PYTHONPATH=src python -m repro.launch.serve --admission --rate 500
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_reduced_config
 from repro.core.router import EagleConfig, EagleRouter
 from repro.data.routerbench import make_corpus, pairwise_feedback
+from repro.serving.admission import AdmissionQueue
 from repro.serving.engine import FleetModel, Request, ServingEngine
 
 
@@ -34,6 +37,39 @@ def build_engine(n_fleet: int = 4, dim: int = 64, seed: int = 0,
     return engine, corpus
 
 
+def build_admission(engine: ServingEngine, *, window_bucket: int = 32,
+                    max_wait_ms: float = 5.0, shed_watermark: int = 128,
+                    reject_cap: int = 512, **cfg_kw) -> AdmissionQueue:
+    """Admission frontend in front of a launcher-built engine, sharing
+    its telemetry scope and its dispatcher's bucket ladder so coalesced
+    windows land on pre-warmed executable shapes."""
+    return AdmissionQueue.for_engine(
+        engine, window_bucket=window_bucket, max_wait_ms=max_wait_ms,
+        shed_watermark=shed_watermark, reject_cap=reject_cap, **cfg_kw)
+
+
+def _serve_admitted(engine, reqs, rate_hz: float, window: int,
+                    max_wait_ms: float):
+    """Real-clock demo loop: submit at Poisson gaps, pump the queue,
+    sleep until its next flush deadline, then drain."""
+    queue = build_admission(engine, window_bucket=window,
+                            max_wait_ms=max_wait_ms)
+    rng = np.random.default_rng(0)
+    responses = []
+    for req in reqs:
+        time.sleep(float(rng.exponential(1.0 / rate_hz)))
+        rej = queue.submit(req)
+        if rej is not None:
+            print(f"rejected rid={rej.rid} at depth {rej.depth}")
+        responses += [c.response for c in queue.pump()]
+        due = queue.next_flush_ns()
+        if due is not None:
+            time.sleep(max(0.0, (due - queue.now_ns()) / 1e9) * 0.5)
+    responses += [c.response for c in queue.drain()]
+    print("admission:", queue.summary())
+    return sorted(responses, key=lambda r: r.rid)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -41,6 +77,13 @@ def main():
     ap.add_argument("--budget", type=float, default=5.0)
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--admission", action="store_true",
+                    help="stream requests through the admission queue "
+                         "on the real clock instead of one serve() call")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="mean offered load (req/s) for --admission")
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     args = ap.parse_args()
 
     engine, corpus = build_engine(args.fleet, seed=args.seed)
@@ -51,7 +94,11 @@ def main():
                     budget=float(args.budget), max_new_tokens=args.max_new,
                     rid=k)
             for k, i in enumerate(test)]
-    responses = engine.serve(reqs)
+    if args.admission:
+        responses = _serve_admitted(engine, reqs, args.rate, args.window,
+                                    args.max_wait_ms)
+    else:
+        responses = engine.serve(reqs)
     for r in responses[:8]:
         print(f"req {r.rid:3d} -> {r.model:24s} tokens {r.tokens.tolist()}")
     print("stats:", engine.stats)

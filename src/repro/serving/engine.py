@@ -17,6 +17,7 @@ functions are what the dry-run lowers (launch/dryrun.py).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence
@@ -26,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as OBS
-from repro.core.dispatch import RouteDispatcher
+from repro.core.dispatch import RouteDispatcher, batch_bucket, bucket_ladder
 from repro.core.router import EagleRouter
 from repro.core.state import DoubleBuffer
 from repro.models import transformer as T
@@ -40,6 +41,13 @@ class Request:
     budget: float
     max_new_tokens: int = 8
     rid: int = 0
+    # admission metadata (serving/admission.py): stamped arrival time
+    # (0 = unstamped -> the queue stamps at submit), end-to-end deadline
+    # (the coalescing window flushes by min(deadline, max_wait)), and
+    # priority class (higher flushes first)
+    arrival_ns: int = 0
+    deadline_ms: float = math.inf
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -98,11 +106,23 @@ class ServingEngine:
                  quality_oracle: Optional[Callable] = None,
                  dispatcher: Optional[RouteDispatcher] = None,
                  warmup_batch_sizes: Optional[Sequence[int]] = None,
-                 obs: Optional[OBS.Observability] = None):
+                 obs: Optional[OBS.Observability] = None,
+                 gen_bucket: bool = False, gen_min_bucket: int = 1,
+                 gen_max_bucket: int = 64,
+                 gen_pad_len: Optional[int] = None):
         assert list(fleet) == router.model_names, "fleet/router order mismatch"
         self.fleet = fleet
         self.router = router
         self.compare_rate = compare_rate
+        # generation-shape bucketing: pad each per-model group's rows to
+        # the power-of-two ladder (padded rows are independent in the
+        # batch dim, so real rows are untouched) and optionally floor
+        # the token panel length, so prefill/decode executables come
+        # from a finite shape universe warmup_generate() can pre-bake
+        self.gen_bucket = gen_bucket
+        self.gen_min_bucket = gen_min_bucket
+        self.gen_max_bucket = gen_max_bucket
+        self.gen_pad_len = gen_pad_len
         self.rng = np.random.default_rng(seed)
         self.quality_oracle = quality_oracle  # (emb, model_idx) -> quality
         # one telemetry scope threads through every layer the engine
@@ -170,7 +190,30 @@ class ServingEngine:
             self.dbuf.commit(self.router.global_ratings)
         return n
 
+    def warmup_generate(self, prompt_len: int,
+                        batch_sizes: Optional[Sequence[int]] = None,
+                        max_new: int = 2) -> None:
+        """Pre-trace every fleet model's prefill/decode executables for
+        the generate-bucket ladder at a fixed padded prompt length, so
+        bucketed generation at steady state never compiles. (Decode
+        shapes depend only on the row bucket; prefill on (bucket,
+        prompt_len) — callers must pad prompts to `prompt_len`, e.g.
+        via `gen_pad_len`.)"""
+        if batch_sizes is not None:
+            buckets = sorted({batch_bucket(n, self.gen_min_bucket,
+                                           self.gen_max_bucket)
+                              for n in batch_sizes})
+        else:
+            buckets = list(bucket_ladder(self.gen_min_bucket,
+                                         self.gen_max_bucket))
+        for b in buckets:
+            toks = np.zeros((b, prompt_len), np.int32)
+            for m in self.fleet.values():
+                m.generate(toks, max_new)
+
     def serve(self, requests: Sequence[Request]) -> List[Response]:
+        if not len(requests):
+            return []   # np.stack below rejects empty lists
         obs = self.obs
         self._m_steps.inc()
         self._g_queue.set(len(requests))
@@ -200,7 +243,13 @@ class ServingEngine:
                 if sel.size == 0:
                     continue
                 max_s = max(len(requests[i].tokens) for i in sel)
-                toks = np.zeros((sel.size, max_s), np.int32)
+                rows = int(sel.size)
+                if self.gen_bucket:
+                    rows = batch_bucket(rows, self.gen_min_bucket,
+                                        self.gen_max_bucket)
+                    if self.gen_pad_len is not None:
+                        max_s = max(max_s, self.gen_pad_len)
+                toks = np.zeros((rows, max_s), np.int32)
                 for row, i in enumerate(sel):
                     t = requests[i].tokens
                     toks[row, :len(t)] = t

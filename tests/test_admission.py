@@ -1,0 +1,381 @@
+"""Deterministic-clock tests for the admission frontend
+(serving/admission.py + serving/traffic.py): dual flush triggers
+(bucket-boundary vs deadline), priority ordering, shed/reject
+watermarks, the open-loop driver's conservation laws, dispatcher
+equivalence of the sim backend, and an end-to-end
+AdmissionQueue -> ServingEngine run whose per-request responses are
+bit-identical to direct serve() on the same coalesced batches."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs as OBS
+from repro.configs import get_reduced_config
+from repro.core.dispatch import RouteDispatcher
+from repro.core.router import EagleConfig, EagleRouter
+from repro.data.routerbench import make_corpus, pairwise_feedback
+from repro.serving import traffic as TR
+from repro.serving.admission import (FLUSH_DEADLINE, FLUSH_DRAIN,
+                                     FLUSH_FULL, AdmissionConfig,
+                                     AdmissionQueue, Rejection)
+from repro.serving.engine import (FleetModel, Request, Response,
+                                  ServingEngine)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class Clock:
+    """Injectable deterministic clock (ns)."""
+
+    def __init__(self, t: int = 0):
+        self.t = t
+
+    def __call__(self) -> int:
+        return self.t
+
+    def advance_ms(self, ms: float):
+        self.t += int(ms * 1e6)
+
+
+class EchoServer:
+    """serve() stub recording every flushed batch."""
+
+    def __init__(self, latency_s: float = 0.001):
+        self.batches = []
+        self.latency_s = latency_s
+
+    def serve(self, reqs):
+        self.batches.append(list(reqs))
+        return [Response(r.rid, "m0", np.empty(0, np.int32),
+                         self.latency_s) for r in reqs]
+
+
+def _req(rid, budget=5.0, deadline_ms=math.inf, priority=0, dim=4):
+    return Request(tokens=np.empty(0, np.int32),
+                   embedding=np.full(dim, rid, np.float32),
+                   budget=budget, rid=rid, deadline_ms=deadline_ms,
+                   priority=priority)
+
+
+def _queue(server, clock, **cfg_kw):
+    cfg_kw.setdefault("window_bucket", 8)
+    cfg_kw.setdefault("max_wait_ms", 5.0)
+    cfg_kw.setdefault("min_bucket", 8)
+    cfg = AdmissionConfig(**cfg_kw)
+    return AdmissionQueue(server.serve, cfg, obs=OBS.Observability(),
+                          now_ns=clock)
+
+
+# ---------------------------------------------------------------------------
+# flush triggers
+# ---------------------------------------------------------------------------
+
+def test_size_trigger_fires_at_bucket_boundary():
+    clk, srv = Clock(), EchoServer()
+    q = _queue(srv, clk)
+    for i in range(7):
+        assert q.submit(_req(i)) is None
+    assert q.pump() == []              # 7 < window, deadline not due
+    assert q.depth == 7
+    q.submit(_req(7))                  # reaches the bucket boundary
+    out = q.pump()
+    assert [c.rid for c in out] == list(range(8))
+    assert all(c.flush_reason == FLUSH_FULL for c in out)
+    assert q.depth == 0 and len(srv.batches) == 1
+
+
+def test_deadline_trigger_flushes_partial_window():
+    clk, srv = Clock(), EchoServer()
+    q = _queue(srv, clk)               # max_wait_ms = 5
+    for i in range(3):
+        q.submit(_req(i))
+    clk.advance_ms(4.999)
+    assert q.pump() == []              # slack not yet exhausted
+    clk.advance_ms(0.001)
+    out = q.pump()
+    assert [c.rid for c in out] == [0, 1, 2]
+    assert all(c.flush_reason == FLUSH_DEADLINE for c in out)
+    assert all(abs(c.wait_us - 5000.0) < 1.0 for c in out)
+
+
+def test_per_request_deadline_tighter_than_window():
+    clk, srv = Clock(), EchoServer()
+    q = _queue(srv, clk)
+    q.submit(_req(0, deadline_ms=1.0))   # tighter than the 5ms window
+    q.submit(_req(1))
+    assert q.next_flush_ns() == int(1e6)
+    clk.advance_ms(1.0)
+    out = q.pump()                       # the due request pulls both
+    assert [c.rid for c in out] == [0, 1]
+    assert out[0].flush_reason == FLUSH_DEADLINE
+
+
+def test_oversized_backlog_drains_in_window_chunks():
+    clk, srv = Clock(), EchoServer()
+    q = _queue(srv, clk)
+    for i in range(20):
+        q.submit(_req(i))
+    out = q.pump()
+    assert len(out) == 16                       # two full windows
+    clk.advance_ms(5.0)
+    out += q.pump()                             # deadline takes the rest
+    assert [len(b) for b in srv.batches] == [8, 8, 4]
+    assert sorted(c.rid for c in out) == list(range(20))
+
+
+def test_drain_flushes_everything():
+    clk, srv = Clock(), EchoServer()
+    q = _queue(srv, clk)
+    for i in range(3):
+        q.submit(_req(i))
+    out = q.drain()
+    assert [c.rid for c in out] == [0, 1, 2]
+    assert all(c.flush_reason == FLUSH_DRAIN for c in out)
+    assert q.depth == 0
+
+
+# ---------------------------------------------------------------------------
+# priority, shed, reject
+# ---------------------------------------------------------------------------
+
+def test_priority_order_within_flush():
+    clk, srv = Clock(), EchoServer()
+    q = _queue(srv, clk, window_bucket=8)
+    for rid, prio in [(0, 0), (1, 2), (2, 1), (3, 2)]:
+        q.submit(_req(rid, priority=prio))
+    out = q.drain()
+    # priority desc, FIFO within a class
+    assert [c.rid for c in out] == [1, 3, 2, 0]
+    assert [c.priority for c in out] == [2, 2, 1, 0]
+
+
+def test_shed_watermark_clamps_budgets():
+    clk, srv = Clock(), EchoServer()
+    q = _queue(srv, clk, window_bucket=64, max_wait_ms=50.0,
+               shed_watermark=4, reject_cap=8, shed_budget=0.0)
+    for i in range(6):
+        assert q.submit(_req(i, budget=9.0)) is None
+    out = q.drain()
+    flushed = {r.rid: r for r in srv.batches[0]}
+    # depth 0..3 admitted clean; depth 4,5 (rids 4,5) budget-clamped
+    assert [flushed[i].budget for i in range(4)] == [9.0] * 4
+    assert [flushed[i].budget for i in (4, 5)] == [0.0, 0.0]
+    assert {c.rid for c in out if c.shed} == {4, 5}
+    assert q.summary()["shed"] == 2
+
+
+def test_reject_past_hard_cap():
+    clk, srv = Clock(), EchoServer()
+    q = _queue(srv, clk, window_bucket=64, max_wait_ms=50.0,
+               shed_watermark=2, reject_cap=4)
+    rejs = [q.submit(_req(i)) for i in range(6)]
+    assert rejs[:4] == [None] * 4
+    assert all(isinstance(r, Rejection) for r in rejs[4:])
+    assert rejs[4].reason == "queue_full" and rejs[4].depth == 4
+    assert q.depth == 4                       # rejected ones not queued
+    assert q.summary()["rejected"] == 2
+    out = q.drain()
+    assert sorted(c.rid for c in out) == [0, 1, 2, 3]
+
+
+def test_admission_metrics_and_flush_log():
+    clk, srv = Clock(), EchoServer()
+    ob = OBS.Observability()
+    cfg = AdmissionConfig(window_bucket=8, max_wait_ms=5.0, min_bucket=8,
+                          keep_flushed_requests=True)
+    q = AdmissionQueue(srv.serve, cfg, obs=ob, now_ns=clk)
+    for i in range(8):
+        q.submit(_req(i))
+    q.pump()
+    q.submit(_req(8))
+    assert ob.registry.value("admission_queue_depth") == 1
+    clk.advance_ms(5.0)
+    q.pump()
+    assert ob.registry.value("admission_flush_total", reason="full") == 1
+    assert ob.registry.value("admission_flush_total",
+                             reason="deadline") == 1
+    h = ob.registry.find("admission_wait_us")
+    assert h.count == 9
+    assert [f.n for f in q.flush_log] == [8, 1]
+    assert [len(f.requests) for f in q.flush_log] == [8, 1]
+    assert q.flush_log[0].bucket == 8 and q.flush_log[1].bucket == 8
+
+
+# ---------------------------------------------------------------------------
+# traffic generators + open-loop driver
+# ---------------------------------------------------------------------------
+
+def test_arrival_processes_seeded_and_monotone():
+    a1 = TR.poisson_arrivals(1000.0, 500, seed=3)
+    a2 = TR.poisson_arrivals(1000.0, 500, seed=3)
+    np.testing.assert_array_equal(a1, a2)
+    assert (np.diff(a1) >= 0).all()
+    # mean interarrival ~ 1/rate (1ms), generously bracketed
+    gaps = np.diff(a1) / 1e9
+    assert 0.7e-3 < gaps.mean() < 1.3e-3
+    b = TR.burst_arrivals(1000.0, 2000, seed=3, cv=3.0)
+    bg = np.diff(b) / 1e9
+    # Gamma cv=3 is much burstier than Poisson (cv=1)
+    assert bg.std() / bg.mean() > 1.8
+    with pytest.raises(ValueError):
+        TR.make_arrivals("uniform", 1.0, 1)
+
+
+def test_replay_arrivals_rebase_and_scale():
+    arr = TR.replay_arrivals([10.0, 10.5, 12.0], rate_scale=2.0)
+    np.testing.assert_array_equal(arr, [0, int(0.25e9), int(1.0e9)])
+    recs = [{"ts": 5.0, "rid": 0}, {"ts": 6.0, "rid": 1}, {"rid": 2}]
+    np.testing.assert_array_equal(
+        TR.arrivals_from_decision_log(recs), [0, int(1e9)])
+
+
+def test_open_loop_driver_conservation_and_waits():
+    srv = EchoServer(latency_s=0.002)
+    cfg = AdmissionConfig(window_bucket=8, max_wait_ms=5.0, min_bucket=8,
+                          shed_watermark=16, reject_cap=32)
+    q = AdmissionQueue(srv.serve, cfg, obs=OBS.Observability())
+    n = 200
+    reqs = [_req(i) for i in range(n)]
+    arrivals = TR.poisson_arrivals(2000.0, n, seed=5)
+    res = TR.OpenLoopDriver(q, reqs, arrivals).run()
+    assert len(res.completed) + len(res.rejections) == n
+    assert q.depth == 0
+    waits = res.wait_us()
+    assert (waits >= 0).all()
+    for c in res.completed:
+        assert c.e2e_us == c.wait_us + c.service_us
+        assert c.service_us == pytest.approx(2000.0)
+    # goodput with an infinite deadline is just completion rate
+    assert res.goodput_hz(1e9) == pytest.approx(
+        len(res.completed) / (res.horizon_ns / 1e9))
+
+
+def test_driver_overload_sheds_instead_of_growing():
+    # service 10ms/window of 8 => capacity 800/s; offer 4x that
+    srv = EchoServer(latency_s=0.010)
+    cfg = AdmissionConfig(window_bucket=8, max_wait_ms=5.0, min_bucket=8,
+                          shed_watermark=16, reject_cap=64)
+    q = AdmissionQueue(srv.serve, cfg, obs=OBS.Observability())
+    n = 600
+    reqs = [_req(i, budget=9.0) for i in range(n)]
+    res = TR.OpenLoopDriver(q, reqs,
+                            TR.poisson_arrivals(3200.0, n, seed=6)).run()
+    summ = q.summary()
+    assert summ["shed"] > 0
+    depths = [d for _, d in res.depth_series]
+    assert max(depths) <= 64            # bounded by the cap watermarks
+    shed_reqs = [r for b in srv.batches for r in b if r.budget == 0.0]
+    assert len(shed_reqs) == summ["shed"]
+
+
+# ---------------------------------------------------------------------------
+# sim backend: real dispatch, cost-proportional service
+# ---------------------------------------------------------------------------
+
+def test_sim_server_routes_like_dispatcher_and_prices_by_cost():
+    rng = np.random.default_rng(0)
+    n_models, dim = 4, 8
+    r = EagleRouter([f"m{i}" for i in range(n_models)],
+                    np.asarray([1.0, 2.0, 4.0, 8.0]),
+                    EagleConfig(embed_dim=dim), db_capacity=64)
+    emb = rng.normal(size=(40, dim)).astype(np.float32)
+    a = rng.integers(0, n_models, 40)
+    b = (a + 1) % n_models
+    r.fit(emb, a, b, rng.choice([0.0, 0.5, 1.0], 40),
+          query_id=np.arange(40))
+    d = RouteDispatcher.for_router(r, max_bucket=16,
+                                   obs=OBS.Observability())
+    srv = TR.SimServer(d, r.state, r.model_names, r.costs)
+    reqs = [Request(tokens=np.empty(0, np.int32), embedding=emb[i],
+                    budget=9.0, rid=i) for i in range(10)]
+    resps = srv.serve(reqs)
+    want = d.route(r.state, emb[:10], np.full(10, 9.0, np.float32))
+    assert [x.model for x in resps] == [r.model_names[c] for c in want]
+    # all requests in one window report the shared batch service time
+    assert len({x.latency_s for x in resps}) == 1
+    # clamped budgets -> cheapest model -> strictly cheaper service
+    poor = [Request(tokens=np.empty(0, np.int32), embedding=emb[i],
+                    budget=0.0, rid=i) for i in range(10)]
+    assert srv.serve(poor)[0].latency_s < resps[0].latency_s
+    assert srv.serve([]) == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: AdmissionQueue -> ServingEngine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_world():
+    names = ["olmo-1b", "mamba2-780m"]
+    corpus = make_corpus(seed=0, n_per_dataset=30, dim=32,
+                         model_names=names, costs=np.asarray([4.0, 1.0]))
+    fb = pairwise_feedback(corpus, corpus.train_idx, seed=0,
+                           pairs_per_query=4)
+
+    def mk_engine(**kw):
+        router = EagleRouter(names, corpus.costs,
+                             EagleConfig(embed_dim=32), db_capacity=512)
+        router.fit(fb["emb"], fb["model_a"], fb["model_b"],
+                   fb["outcome"], query_id=fb["query_idx"])
+        fleet = {n: FleetModel(get_reduced_config(n), seed=i, max_len=32)
+                 for i, n in enumerate(names)}
+        return ServingEngine(fleet, router, compare_rate=0.0, seed=0,
+                             obs=OBS.Observability(), **kw)
+
+    return corpus, mk_engine
+
+
+def test_serve_empty_batch_returns_empty(engine_world):
+    _, mk_engine = engine_world
+    assert mk_engine().serve([]) == []   # np.stack([]) used to raise
+
+
+def test_gen_bucketing_row_padding_is_inert(engine_world):
+    corpus, mk_engine = engine_world
+    e_plain = mk_engine()
+    e_bucket = mk_engine(gen_bucket=True, gen_min_bucket=4)
+    rng = np.random.default_rng(2)
+    reqs = [Request(tokens=rng.integers(0, 64, 6).astype(np.int32),
+                    embedding=corpus.embeddings[corpus.test_idx[k]],
+                    budget=10.0, max_new_tokens=2, rid=k)
+            for k in range(5)]          # groups pad 5 -> 8 rows
+    r1, r2 = e_plain.serve(reqs), e_bucket.serve(reqs)
+    for a, b in zip(r1, r2):
+        assert a.model == b.model
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_admission_responses_bit_identical_to_direct_serve(engine_world):
+    corpus, mk_engine = engine_world
+    engine = mk_engine()
+    clk = Clock()
+    q = AdmissionQueue.for_engine(
+        engine, now_ns=clk, window_bucket=8, max_wait_ms=2.0,
+        shed_watermark=32, reject_cap=64, keep_flushed_requests=True)
+    rng = np.random.default_rng(3)
+    reqs = [Request(tokens=rng.integers(0, 64, 6).astype(np.int32),
+                    embedding=corpus.embeddings[corpus.test_idx[k]],
+                    budget=float(b), max_new_tokens=2, rid=k)
+            for k, b in enumerate(rng.uniform(1.0, 8.0, 12))]
+    completed = []
+    for r in reqs:
+        clk.advance_ms(0.3)
+        q.submit(r)
+        completed += q.pump()
+    clk.advance_ms(5.0)
+    completed += q.pump()
+    assert sorted(c.rid for c in completed) == list(range(12))
+    assert [f.n for f in q.flush_log] == [8, 4]
+    # replay the SAME coalesced batches straight into serve(): with no
+    # feedback the routing pipeline is pure, so every response must be
+    # bit-identical to what the admission path produced
+    direct = {}
+    for fr in q.flush_log:
+        for resp in engine.serve(fr.requests):
+            direct[resp.rid] = resp
+    for c in completed:
+        d = direct[c.rid]
+        assert d.model == c.response.model
+        np.testing.assert_array_equal(d.tokens, c.response.tokens)

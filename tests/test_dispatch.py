@@ -134,6 +134,38 @@ def test_warmup_prebakes_ladder():
     assert stats["misses"] == stats["warmed"] == 3
 
 
+def test_oversized_batch_chunks_on_ladder():
+    """A batch beyond max_bucket splits into ladder-sized dispatches:
+    choices identical to one raw route_batch call over the full batch,
+    zero fresh compiles after warmup, and route_result concatenating
+    both of its outputs across the chunks."""
+    r, rng = _router(seed=9)
+    d = RouteDispatcher.for_router(r, min_bucket=8, max_bucket=16)
+    d.warmup(r.state)
+    q = rng.normal(size=(35, 8)).astype(np.float32)
+    budgets = rng.uniform(0.5, 6.0, 35).astype(np.float32)
+    want = np.asarray(route_batch(r.state, q, budgets, r.costs,
+                                  **r._kw()).choices)
+    with CompileCounter() as c:
+        got = d.route(r.state, q, budgets)
+        ch2, topk = d.route_result(r.state, q, budgets)
+    assert c.delta() == 0                    # 16+16+8 all pre-warmed
+    assert got.shape == (35,)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(ch2, want)
+    assert topk.shape[0] == 35
+
+
+def test_oversized_batch_scalar_budget():
+    """Scalar budgets broadcast across chunk boundaries too."""
+    r, rng = _router(seed=10)
+    d = RouteDispatcher.for_router(r, max_bucket=MIN_BUCKET)
+    q = rng.normal(size=(21, 8)).astype(np.float32)
+    got = d.route(r.state, q, 2.5)
+    np.testing.assert_array_equal(got, np.asarray(r.route(q, 2.5)))
+    assert got.shape == (21,)
+
+
 def test_cache_key_tracks_state_shape():
     """Growing the DB changes (capacity, records_per_query) — the cache
     key must see that as a new signature, not serve a stale executable."""
