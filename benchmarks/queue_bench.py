@@ -292,6 +292,119 @@ def run(verbose: bool = True, smoke: bool = False,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# router-quality gate (ci.sh --assert-quality, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+QUALITY_STEPS = 500    # seeded decision steps in the gate run
+FOLD_EVERY = 10        # rating folds every K steps (50 folds total)
+
+
+def run_quality_gate(verbose: bool = True, smoke: bool = False,
+                     assert_quality: bool = False):
+    """Seeded router-quality gate over the queue-bench world.
+
+    Drives QUALITY_STEPS routed windows (real bucketed dispatch, seeded
+    ragged batch sizes/budgets) with the RouterQualityMonitor attached,
+    and asserts the monitor's three contracts:
+
+      1. EXACTNESS — every step's regret vector from the vectorized
+         estimator must equal the brute-force oracle BIT FOR BIT
+         (np.array_equal on float64, no tolerance);
+      2. NO FALSE ALARMS — the run is stationary (rating folds carry
+         only small seeded jitter), so ZERO drift alerts may fire;
+      3. SENSITIVITY — an injected +400-point rating step on one model
+         must fire at least one rating_drift alert.
+
+    The quality snapshot is merged into BENCH_route.json (key
+    "quality_gate") next to the obs-gate payload."""
+    from benchmarks.route_batch_bench import \
+        _merge_bench_json as _merge_route_json
+    from repro.obs.quality import (RouterQualityMonitor,
+                                   routing_regret_oracle)
+
+    ob = OBS.Observability(enabled=True)
+    corpus, router, dispatch, _ = _build_world(smoke, obs=ob)
+    dispatch.warmup(router.state)
+    mon = RouterQualityMonitor.for_router(router, obs=ob)
+    rng = np.random.default_rng(31)
+    embs = np.asarray(corpus.embeddings, np.float32)
+    bud_lo = float(corpus.costs.min())
+    bud_hi = float(corpus.costs.max())
+    base = np.asarray(router.global_ratings, np.float64)
+    n_models = len(mon.model_names)
+
+    # phase 1: stationary seeded decision run, bitwise-checked per step
+    t0 = time.perf_counter()
+    mismatches = 0
+    scored = 0
+    for step in range(QUALITY_STEPS):
+        bs = int(rng.integers(1, WINDOW + 1))
+        i = rng.integers(0, len(embs), bs)
+        budgets = rng.uniform(bud_lo, bud_hi, bs).astype(np.float32)
+        choices = dispatch.route(router.state, embs[i], budgets)
+        got = mon.score_batch(budgets, choices)
+        want = routing_regret_oracle(mon.ratings, mon.costs, budgets,
+                                     choices)
+        if not np.array_equal(got, want):
+            mismatches += 1
+        scored += bs
+        if (step + 1) % FOLD_EVERY == 0:
+            # stationary rating fold: tiny seeded jitter only
+            mon.observe_ratings(base + rng.normal(0.0, 1.0, n_models))
+    alerts_stationary = mon.alerts_fired
+
+    # phase 2: inject a rating step on one model -> the detector must
+    # fire (and the alert must land as a typed event)
+    shifted = base.copy()
+    shifted[0] += 400.0
+    mon.observe_ratings(shifted + rng.normal(0.0, 1.0, n_models))
+    alerts_perturbed = mon.alerts_fired - alerts_stationary
+    alert_events = ob.events.records("quality_alert")
+    wall_s = time.perf_counter() - t0
+
+    payload = {
+        "smoke": smoke,
+        "steps": QUALITY_STEPS,
+        "requests_scored": scored,
+        "oracle_mismatches": mismatches,
+        "folds": QUALITY_STEPS // FOLD_EVERY + 1,
+        "alerts_stationary": alerts_stationary,
+        "alerts_after_perturbation": alerts_perturbed,
+        "alert_events": len(alert_events),
+        "wall_s": wall_s,
+        "quality": mon.snapshot(),
+    }
+    _merge_route_json({"quality_gate": payload})
+    C.save_json("quality_gate.json", payload)
+    if verbose:
+        print(f"[quality_gate] steps={QUALITY_STEPS} requests={scored} "
+              f"oracle_mismatches={mismatches} "
+              f"alerts_stationary={alerts_stationary} "
+              f"alerts_perturbed={alerts_perturbed} wall={wall_s:.1f}s")
+    if assert_quality:
+        errs = []
+        if mismatches:
+            errs.append(f"{mismatches} step(s) where the vectorized "
+                        "regret differed from the oracle (bitwise)")
+        if alerts_stationary:
+            errs.append(f"{alerts_stationary} false-positive drift "
+                        "alert(s) on the stationary run (expected 0)")
+        if alerts_perturbed < 1:
+            errs.append("injected +400 rating step fired no drift alert")
+        if not alert_events and alerts_perturbed:
+            errs.append("alerts fired but no quality_alert event landed "
+                        "in the EventLog")
+        if errs:
+            raise SystemExit("quality gate violation(s):\n  "
+                             + "\n  ".join(errs))
+        if verbose:
+            print(f"[quality_gate] gate OK: {scored} requests bit-exact "
+                  f"vs oracle, 0 stationary alerts, "
+                  f"{alerts_perturbed} alert(s) on perturbation")
+    return payload
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -301,5 +414,13 @@ if __name__ == "__main__":
                     help="gate: 0 post-warmup compiles, 0 rejects/sheds "
                          "below the watermark, p99 wait under deadline, "
                          "occupancy >= 60%%, overload depth stationary")
+    ap.add_argument("--assert-quality", action="store_true",
+                    help="router-quality gate: regret bit-exact vs "
+                         "oracle over a seeded 500-step run, zero "
+                         "stationary drift alerts, >=1 alert on an "
+                         "injected rating step")
     args = ap.parse_args()
-    run(smoke=args.smoke, assert_queue=args.assert_queue)
+    if args.assert_quality:
+        run_quality_gate(smoke=args.smoke, assert_quality=True)
+    else:
+        run(smoke=args.smoke, assert_queue=args.assert_queue)

@@ -338,7 +338,21 @@ def run_obs_gate(verbose: bool = True, smoke: bool = False,
     independent p50s wobbles by several percent. The run then validates
     every exported artifact (Chrome trace, Prometheus text, JSONL
     decision log) and that instrumentation kept the zero-compile
-    guarantee."""
+    guarantee.
+
+    The full operational plane is LIVE during the measurement: a
+    router-quality monitor scores every enabled-leg batch (regret +
+    selection shares), and an ObsExporter serves the scrape endpoints
+    on an ephemeral port with a background thread scraping /metrics,
+    /slo and /healthz throughout — so the <5% budget is enforced with
+    exporter and quality monitors enabled, not just bare spans."""
+    import threading
+    import urllib.request
+
+    from repro.obs.exporter import ObsExporter
+    from repro.obs.quality import RouterQualityMonitor
+    from repro.obs.slo import SLOEngine, default_serving_rules
+
     n_steps = 150 if smoke else 500
     out_dir = C.RESULTS
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -349,6 +363,26 @@ def run_obs_gate(verbose: bool = True, smoke: bool = False,
                            trace_capacity=8 * n_steps + 64,
                            event_capacity=1 << 20)
     w = _RaggedWorld(smoke, n_steps, obs=ob)
+    quality = RouterQualityMonitor.for_router(w.router, obs=ob)
+    slo = SLOEngine(ob.registry, default_serving_rules(), obs=ob)
+    exporter = ObsExporter(ob, slo=slo, quality=quality).start()
+    scrape_stop = threading.Event()
+    scrape_stats = {"scrapes": 0, "errors": 0}
+
+    def _scrape_loop():
+        while not scrape_stop.is_set():
+            for p in ("/metrics", "/slo", "/healthz"):
+                try:
+                    urllib.request.urlopen(exporter.url(p),
+                                           timeout=5).read()
+                    scrape_stats["scrapes"] += 1
+                except Exception:
+                    scrape_stats["errors"] += 1
+            scrape_stop.wait(0.25)
+
+    scraper = threading.Thread(target=_scrape_loop, name="obs-scraper",
+                               daemon=True)
+    scraper.start()
     warm_s, warm_routes = w.warmup()
     # warm both measurement paths (CPython-level caches, branch setup)
     for _ in range(3):
@@ -389,13 +423,26 @@ def run_obs_gate(verbose: bool = True, smoke: bool = False,
                              "model_idx": choices.tolist(),
                              "budget": budgets.tolist(),
                              "feasible": feas.tolist()})
+                        # quality monitor INSIDE the timed enabled leg:
+                        # the O(1) capture is part of the overhead the
+                        # budget must absorb (scoring defers to the
+                        # feedback folds below)
+                        quality.observe_batch(budgets, choices)
                     on_us.append((time.perf_counter() - t0) * 1e6)
                     routed_requests += len(budgets)
             if (step + 1) % w.commit_every == 0:
                 ob.enable()
                 w.feedback_cycle()
+                # the ragged world folds feedback via router.update(),
+                # which bypasses the feedback() hook — feed the post-
+                # fold ratings to the monitor explicitly
+                quality.observe_ratings(
+                    np.asarray(w.router.global_ratings))
     ob.enable()
     compiles = cc.delta()
+    scrape_stop.set()
+    scraper.join(timeout=10.0)
+    exporter.stop()
 
     p50_off = float(np.percentile(off_us, 50))
     p50_on = float(np.percentile(on_us, 50))
@@ -409,9 +456,10 @@ def run_obs_gate(verbose: bool = True, smoke: bool = False,
     n_samples = _validate_prometheus(prom)
     (out_dir / "obs_metrics.prom").write_text(prom)
     n_decisions = ob.events.dump(decisions_path)
-    if n_decisions != routed_requests or ob.events.emitted < routed_requests:
+    n_route = len(ob.events.records("route"))
+    if n_route != routed_requests or ob.events.emitted < routed_requests:
         raise SystemExit(
-            f"decision log incomplete: {n_decisions} records for "
+            f"decision log incomplete: {n_route} route records for "
             f"{routed_requests} routed requests")
     for line in decisions_path.read_text().splitlines():
         json.loads(line)
@@ -427,9 +475,15 @@ def run_obs_gate(verbose: bool = True, smoke: bool = False,
         "post_warmup_xla_compiles": compiles,
         "trace_events": n_events,
         "prometheus_samples": n_samples,
-        "decision_records": n_decisions,
+        "decision_records": n_route,
+        "dumped_records": n_decisions,
         "spans_recorded": ob.tracer.recorded,
         "spans_dropped": ob.tracer.dropped,
+        "exporter": {"scrapes": scrape_stats["scrapes"],
+                     "scrape_errors": scrape_stats["errors"],
+                     "regret_scored": int(ob.registry.value(
+                         "quality_decisions_total", 0)),
+                     "quality_alerts": quality.alerts_fired},
     }
     _merge_bench_json({"obs_gate": payload})
     C.save_json("obs_gate.json", payload)
@@ -438,7 +492,8 @@ def run_obs_gate(verbose: bool = True, smoke: bool = False,
               f"p50_on={p50_on:.0f}us paired_delta={delta:+.1f}us "
               f"overhead={overhead * 100:+.1f}% "
               f"compiles={compiles} trace_events={n_events} "
-              f"prom_samples={n_samples} decisions={n_decisions}")
+              f"prom_samples={n_samples} decisions={n_route} "
+              f"scrapes={scrape_stats['scrapes']}")
     if assert_obs:
         if compiles != 0:
             raise SystemExit(
@@ -449,6 +504,11 @@ def run_obs_gate(verbose: bool = True, smoke: bool = False,
                 f"obs gate: telemetry overhead {overhead * 100:.1f}% "
                 f"exceeds the {max_overhead * 100:.0f}% p50 budget "
                 f"(off={p50_off:.0f}us on={p50_on:.0f}us)")
+        if scrape_stats["scrapes"] == 0 or scrape_stats["errors"]:
+            raise SystemExit(
+                f"obs gate: exporter scraping failed "
+                f"({scrape_stats['scrapes']} ok, "
+                f"{scrape_stats['errors']} errors)")
     return payload
 
 

@@ -4,15 +4,50 @@ feedback folded back into the router online.
 
   PYTHONPATH=src python examples/serve_routed.py --requests 24
   PYTHONPATH=src python examples/serve_routed.py --arrival poisson --rate 2000
+  PYTHONPATH=src python examples/serve_routed.py --serve-obs
 """
 import argparse
+import json
+import urllib.request
 
 import numpy as np
 
-from repro.launch.serve import build_admission, build_engine
+from repro.launch.serve import build_admission, build_engine, build_obs_plane
 from repro.obs import Observability
 from repro.serving import traffic as TR
 from repro.serving.engine import Request
+
+
+def _watch_live_router(exporter):
+    """'Watching a live router' walkthrough: scrape the operational
+    plane the way a dashboard would — over HTTP — and narrate what each
+    endpoint answers. Self-scrapes so the demo runs non-interactively;
+    the same URLs work from curl / Prometheus while the process lives."""
+    get = lambda p: urllib.request.urlopen(exporter.url(p), timeout=5).read()
+    print(f"\n-- watching the live router at http://127.0.0.1:"
+          f"{exporter.port} --")
+    print("  1. is it up?            curl /healthz")
+    print("     ", json.loads(get("/healthz")))
+    print("  2. what is it doing?    curl /metrics   (Prometheus 0.0.4)")
+    lines = [l for l in get("/metrics").decode().splitlines()
+             if l and not l.startswith("#")]
+    for l in lines[:6]:
+        print("     ", l)
+    print(f"      ... {len(lines)} samples total")
+    print("  3. who got each query?  curl '/decisions?n=3'")
+    for l in get("/decisions?n=3").decode().splitlines():
+        print("     ", l)
+    print("  4. is the router good?  curl /quality   (ELO, regret, shares)")
+    q = json.loads(get("/quality"))
+    print(f"      ratings={ {m: round(v, 1) for m, v in q['ratings'].items()} }")
+    print(f"      selection_share={ {m: round(v, 2) for m, v in q['selection_share'].items()} }")
+    print(f"      regret: n={q['regret']['count']} "
+          f"mean={q['regret']['mean']:.2f}  alerts={q['alerts']}")
+    print("  5. are we meeting SLOs? curl /slo       (burn-rate status)")
+    s = json.loads(get("/slo"))
+    for r in s["rules"]:
+        print(f"      {r['rule']:16s} {r['status']:8s} "
+              f"value={r['value']} bound={r['op']}{r['bound']}")
 
 
 def main():
@@ -33,10 +68,21 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--trace", type=str, default=None,
                     help="write a Chrome-trace JSON of the serve step here")
+    ap.add_argument("--serve-obs", action="store_true",
+                    help="start the HTTP observability plane (/metrics "
+                         "/trace /decisions /quality /slo /healthz) on an "
+                         "ephemeral port and run the 'watching a live "
+                         "router' walkthrough after serving")
     args = ap.parse_args()
 
     ob = Observability(enabled=True)
     engine, corpus = build_engine(args.fleet, seed=args.seed, obs=ob)
+    exporter = None
+    if args.serve_obs:
+        # attach the quality monitor + SLO engine BEFORE serving so the
+        # walkthrough's /quality and /decisions reflect this run
+        exporter = build_obs_plane(engine)
+        print(f"obs plane listening: {exporter.url('/metrics')}")
     rng = np.random.default_rng(args.seed)
     rows = corpus.test_idx[:args.requests]
     budgets = rng.uniform(corpus.costs.min(), corpus.costs.max(),
@@ -100,6 +146,11 @@ def main():
     if args.trace:
         ob.tracer.save_chrome_trace(args.trace)
         print(f"\nchrome trace ({ob.tracer.recorded} spans) -> {args.trace}")
+    if exporter is not None:
+        try:
+            _watch_live_router(exporter)
+        finally:
+            exporter.stop()
 
 
 if __name__ == "__main__":

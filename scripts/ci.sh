@@ -19,6 +19,15 @@
 # (Prometheus text, Chrome-trace JSON, decision JSONL with one record
 # per routed request). --assert-obs exits non-zero on any violation.
 #
+# The quality gate (DESIGN.md §11) holds the router-quality monitors
+# to their contract: over a seeded 500-step routed run, the vectorized
+# regret estimator must match the brute-force oracle BIT FOR BIT; zero
+# drift alerts may fire on stationary traffic; an injected +400 ELO
+# step must fire at least one. --assert-quality exits non-zero on any
+# violation and merges the quality snapshot into BENCH_route.json.
+# (Exporter + monitor overhead is held under the same <5% budget by
+# --assert-obs above, which runs with the full plane live.)
+#
 # The queue gate (DESIGN.md §10) holds the admission frontend to its
 # contract: at steady load, zero post-warmup compiles (windows land on
 # the warmed bucket ladder), zero shed/rejected requests, p99 queue
@@ -51,5 +60,10 @@ echo
 echo "===== admission queue gate (0 compiles, bounded overload) ====="
 python -m benchmarks.queue_bench --smoke \
     --assert-queue || status=$((status ? status : $?))
+
+echo
+echo "===== router-quality gate (regret bit-exact, drift alerts) ====="
+python -m benchmarks.queue_bench --smoke \
+    --assert-quality || status=$((status ? status : $?))
 
 exit "$status"

@@ -186,6 +186,11 @@ class RouteDispatcher:
         self._h_occupancy = r.histogram(
             "dispatch_bucket_occupancy", "rows/bucket fill per dispatch",
             bounds=[i / 16 for i in range(1, 17)])
+        # point-in-time companion of the histogram: what the LAST
+        # dispatch filled — the SLO engine's live occupancy signal
+        # (the histogram mean averages over all time)
+        self._g_occupancy = r.gauge(
+            "dispatch_occupancy_last", "rows/bucket fill, last dispatch")
         self._bucket_counters: Dict[int, "OBS.Counter"] = {}
         r.gauge("xla_compiles_total",
                 "process-wide XLA backend compiles (jax.monitoring)",
@@ -297,6 +302,7 @@ class RouteDispatcher:
         self._m_rows.inc(nq)
         self._m_padded.inc(qb)
         self._h_occupancy.observe(nq / qb)
+        self._g_occupancy.set(nq / qb)
         self._bucket_counter(qb).inc()
 
     # -- the hot path --------------------------------------------------------

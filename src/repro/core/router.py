@@ -62,6 +62,11 @@ class EagleRouter:
     #: ServingEngine points this at its own scope.
     obs: Optional["OBS.Observability"] = None
 
+    #: optional router-quality monitor (obs/quality.py): when attached,
+    #: every feedback fold feeds it the comparison outcomes and the
+    #: post-fold rating vector (trajectories + drift detection).
+    quality = None
+
     def __init__(self, model_names: Sequence[str], costs,
                  cfg: EagleConfig = EagleConfig(), db_capacity: int = 4096):
         self.cfg = cfg
@@ -172,12 +177,19 @@ class EagleRouter:
         o.registry.counter("router_feedback_total",
                            "pairwise comparisons folded online").inc(n)
         if before is not None:
-            mag = float(np.max(np.abs(
-                np.asarray(self.global_ratings) - before)))
+            after = np.asarray(self.global_ratings)
+            mag = float(np.max(np.abs(after - before)))
             o.registry.histogram(
                 "router_elo_update_magnitude",
                 "max |delta global rating| per feedback fold",
                 bounds=OBS.geometric_bounds(1e-3, 100.0, 1.5)).observe(mag)
+            if self.quality is not None:
+                # the quality monitor rides the SAME host readout the
+                # magnitude metric already paid for: win-rate
+                # accounting plus the post-fold rating trajectory /
+                # drift detection (obs/quality.py)
+                self.quality.observe_feedback(chosen, opponent, outcome,
+                                              ratings=after)
         return dt
 
 

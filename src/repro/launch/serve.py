@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --fleet 4
   PYTHONPATH=src python -m repro.launch.serve --admission --rate 500
+  PYTHONPATH=src python -m repro.launch.serve --admission --serve-obs 9100
 """
 from __future__ import annotations
 
@@ -10,9 +11,13 @@ import time
 
 import numpy as np
 
+from repro import obs as OBS
 from repro.configs import ARCH_IDS, get_reduced_config
 from repro.core.router import EagleConfig, EagleRouter
 from repro.data.routerbench import make_corpus, pairwise_feedback
+from repro.obs.exporter import ObsExporter
+from repro.obs.quality import RouterQualityMonitor
+from repro.obs.slo import SLOEngine, default_serving_rules
 from repro.serving.admission import AdmissionQueue
 from repro.serving.engine import FleetModel, Request, ServingEngine
 
@@ -35,6 +40,24 @@ def build_engine(n_fleet: int = 4, dim: int = 64, seed: int = 0,
     engine = ServingEngine(fleet, router, compare_rate=compare_rate,
                            seed=seed, quality_oracle=oracle, obs=obs)
     return engine, corpus
+
+
+def build_obs_plane(engine: ServingEngine, *, port: int = 0,
+                    deadline_ms: float = 50.0,
+                    regret_bound: float = 50.0) -> ObsExporter:
+    """The operational plane over a launcher-built engine: quality
+    monitor attached to the router's feedback leg + stock SLO rules
+    over the engine's registry + a started scrape daemon. Returns the
+    running exporter (stop() when done; port 0 picks an ephemeral
+    port, read it back from `.port`)."""
+    quality = RouterQualityMonitor.for_router(engine.router,
+                                              obs=engine.obs)
+    engine.quality = quality
+    slo = SLOEngine(engine.obs.registry,
+                    default_serving_rules(deadline_ms=deadline_ms,
+                                          regret_bound=regret_bound))
+    return ObsExporter(engine.obs, slo=slo, quality=quality,
+                       port=port).start()
 
 
 def build_admission(engine: ServingEngine, *, window_bucket: int = 32,
@@ -84,9 +107,19 @@ def main():
                     help="mean offered load (req/s) for --admission")
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--serve-obs", type=int, default=None, metavar="PORT",
+                    help="start the observability exporter on PORT "
+                         "(0 = ephemeral) and enable span/event capture")
     args = ap.parse_args()
 
-    engine, corpus = build_engine(args.fleet, seed=args.seed)
+    obs = OBS.Observability(enabled=True) if args.serve_obs is not None \
+        else None
+    engine, corpus = build_engine(args.fleet, seed=args.seed, obs=obs)
+    exporter = None
+    if args.serve_obs is not None:
+        exporter = build_obs_plane(engine, port=args.serve_obs)
+        print(f"obs plane at http://127.0.0.1:{exporter.port} "
+              f"(/metrics /trace /decisions /healthz /slo /quality)")
     rng = np.random.default_rng(args.seed)
     test = corpus.test_idx[:args.requests]
     reqs = [Request(tokens=rng.integers(0, 100, rng.integers(4, 12)).astype(np.int32),
@@ -102,6 +135,8 @@ def main():
     for r in responses[:8]:
         print(f"req {r.rid:3d} -> {r.model:24s} tokens {r.tokens.tolist()}")
     print("stats:", engine.stats)
+    if exporter is not None:
+        exporter.stop()
 
 
 if __name__ == "__main__":

@@ -33,8 +33,8 @@ from repro.obs.metrics import (DEFAULT_LATENCY_BOUNDS_US, Counter, Gauge,
 from repro.obs.trace import NULL_SPAN, SpanTracer, named_scope
 
 __all__ = ["Observability", "DEFAULT", "get_obs", "enable", "disable",
-           "SpanTracer", "MetricsRegistry", "EventLog", "Counter",
-           "Gauge", "Histogram", "geometric_bounds",
+           "reset_default", "SpanTracer", "MetricsRegistry", "EventLog",
+           "Counter", "Gauge", "Histogram", "geometric_bounds",
            "DEFAULT_LATENCY_BOUNDS_US", "named_scope", "NULL_SPAN"]
 
 
@@ -92,6 +92,20 @@ DEFAULT = Observability(enabled=False)
 
 def get_obs(obs: Optional[Observability] = None) -> Observability:
     return obs if obs is not None else DEFAULT
+
+
+def reset_default(enabled: bool = False, **kw) -> Observability:
+    """Tear down and re-create the process-default scope.
+
+    Test fixtures call this between tests so metric/event state from a
+    component built without an explicit `obs=` cannot bleed across
+    tests (`tests/conftest.py`). Handles cached from the OLD bundle
+    keep working against the old instruments — isolation comes from
+    `get_obs()` resolving to the fresh bundle at the next lookup, not
+    from invalidating old references."""
+    global DEFAULT
+    DEFAULT = Observability(enabled=enabled, **kw)
+    return DEFAULT
 
 
 def enable(xprof: Optional[bool] = None) -> Observability:

@@ -121,6 +121,26 @@ class EventLog:
             out = [r for r in out if r.get("kind") == kind]
         return out
 
+    def tail(self, n: int, kind: Optional[str] = None) -> List[Dict]:
+        """The most recent `n` retained records (chronological order),
+        optionally filtered by kind — the `/decisions` scrape shape.
+        Walks entries newest-first and stops as soon as `n` records are
+        collected, so a scrape never expands the whole ring."""
+        chunks: List[List[Dict]] = []
+        got = 0
+        for e in reversed(list(self._buf)):
+            recs = list(e.expand()) if isinstance(e, _ColumnBatch) \
+                else [e]
+            if kind is not None:
+                recs = [r for r in recs if r.get("kind") == kind]
+            if recs:
+                chunks.append(recs)
+                got += len(recs)
+                if got >= n:
+                    break
+        out = [r for recs in reversed(chunks) for r in recs]
+        return out[-n:] if n >= 0 else out
+
     def dump(self, path) -> int:
         """Write retained records as JSONL, one line per record;
         returns the line count."""

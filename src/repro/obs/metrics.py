@@ -122,6 +122,26 @@ class Histogram:
             if v > self._max:
                 self._max = v
 
+    def observe_many(self, values):
+        """Batched observe under ONE lock acquisition (hot-path callers
+        with per-batch vectors, e.g. the regret monitor)."""
+        # ndarray.tolist() converts to python floats in C — much faster
+        # than iterating numpy scalars
+        vs = values.tolist() if hasattr(values, "tolist") \
+            else [float(v) for v in values]
+        if not vs:
+            return
+        with self._lock:
+            for v in vs:
+                self._counts[bisect_left(self.bounds, v)] += 1
+                self._sum += v
+            self._count += len(vs)
+            lo, hi = min(vs), max(vs)
+            if lo < self._min:
+                self._min = lo
+            if hi > self._max:
+                self._max = hi
+
     @property
     def count(self) -> int:
         return self._count
@@ -173,10 +193,25 @@ def _labels_key(labels: Dict[str, str]) -> LabelKey:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus text-format label-value escaping: backslash, double
+    quote, and line feed must be escaped or the sample line is
+    unparseable (exposition format 0.0.4)."""
+    return (v.replace("\\", "\\\\").replace('"', '\\"')
+             .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    """# HELP text escaping: backslash and line feed (quotes are legal
+    verbatim in HELP)."""
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _fmt_labels(labels: LabelKey) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"'
+                     for k, v in labels)
     return "{" + inner + "}"
 
 
@@ -254,7 +289,8 @@ class MetricsRegistry:
             by_name.setdefault(name, []).append(m)
         for name, ms in by_name.items():
             if self._help.get(name):
-                lines.append(f"# HELP {name} {self._help[name]}")
+                lines.append(
+                    f"# HELP {name} {_escape_help(self._help[name])}")
             lines.append(f"# TYPE {name} {self._type.get(name, 'untyped')}")
             for m in ms:
                 lab = m.labels

@@ -162,6 +162,10 @@ class AdmissionQueue:
             "admission_rejected_total", "requests refused past the cap")
         self._m_flushed = r.counter(
             "admission_flushed_requests_total", "requests flushed to serve")
+        self._m_deadline_miss = r.counter(
+            "admission_deadline_miss_total",
+            "completed requests whose e2e latency exceeded their own "
+            "deadline (the SLO engine's goodput-complement signal)")
         self._m_flush = {
             reason: r.counter("admission_flush_total",
                               "coalescing windows flushed, by trigger",
@@ -300,6 +304,8 @@ class AdmissionQueue:
         for e, w, resp in zip(picked, waits_us, responses):
             svc_us = resp.latency_s * 1e6
             self._h_e2e.observe(w + svc_us)
+            if w + svc_us > e.req.deadline_ms * 1e3:
+                self._m_deadline_miss.inc()
             out.append(Completed(resp, w, svc_us, reason, e.shed,
                                  e.priority))
         self.flush_log.append(FlushRecord(

@@ -109,7 +109,9 @@ class ServingEngine:
                  obs: Optional[OBS.Observability] = None,
                  gen_bucket: bool = False, gen_min_bucket: int = 1,
                  gen_max_bucket: int = 64,
-                 gen_pad_len: Optional[int] = None):
+                 gen_pad_len: Optional[int] = None,
+                 quality: Optional["RouterQualityMonitor"] = None,
+                 now_ns: Callable[[], int] = time.time_ns):
         assert list(fleet) == router.model_names, "fleet/router order mismatch"
         self.fleet = fleet
         self.router = router
@@ -130,6 +132,17 @@ class ServingEngine:
         # router feedback magnitude, and the engine's own serve spans
         self.obs = OBS.get_obs(obs)
         router.obs = self.obs
+        # decision-log clock: injectable (matching AdmissionQueue's
+        # now_ns) so traffic replays produce deterministic /decisions
+        # output; defaults to wall time, which is what
+        # arrivals_from_decision_log replays
+        self.now_ns = now_ns
+        # optional router-quality monitor (obs/quality.py): fed per
+        # routed batch (regret, selection share) on the obs-enabled
+        # path, and per feedback fold through router.feedback
+        self.quality = quality
+        if quality is not None:
+            router.quality = quality
         self.dispatch = dispatcher or RouteDispatcher.for_router(
             router, obs=self.obs)
         # two device replicas over the router's host buffer: route on
@@ -232,6 +245,8 @@ class ServingEngine:
             self._h_route.observe(route_dt * 1e6)
             if obs.enabled:
                 self._emit_decisions(requests, budgets, choices)
+                if self.quality is not None:
+                    self.quality.observe_batch(budgets, choices)
 
             # ④ group by chosen model, pad to a batch, generate. Each
             # group is timed separately: a request's latency is routing
@@ -314,7 +329,7 @@ class ServingEngine:
         idx = choices.tolist()
         self.obs.events.emit_columns(
             "route", nb,
-            {"ts": time.time(), "batch": nb},
+            {"ts": self.now_ns() / 1e9, "batch": nb},
             {"rid": [r.rid for r in requests],
              "model": [names[c] for c in idx],
              "model_idx": idx,

@@ -1,0 +1,24 @@
+"""Shared fixtures: isolate the process-default Observability bundle.
+
+Several suites route telemetry through the module-level default scope
+(`repro.obs.DEFAULT`) — its registry, event log, and tracer are global
+mutable state, so counters incremented by one test would otherwise leak
+into the next test's assertions. The autouse fixture swaps in a fresh
+disabled bundle around every test via `obs.reset_default()`; code that
+cached a handle before the swap keeps writing to the old bundle, which
+is exactly the isolation we want (fresh `get_obs()` lookups resolve to
+the new one).
+"""
+import pytest
+
+from repro import obs as OBS
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_obs():
+    before = OBS.DEFAULT
+    OBS.reset_default(enabled=False)
+    try:
+        yield
+    finally:
+        OBS.DEFAULT = before

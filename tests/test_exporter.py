@@ -1,0 +1,229 @@
+"""Exporter + SLO engine tests (DESIGN.md §11): endpoint smoke over an
+ephemeral port (content types, Prometheus parseability, JSONL tail,
+query params, 404), scrape metering, and SLO rule evaluation with
+multi-window burn-rate status transitions."""
+import json
+import re
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro import obs as OBS
+from repro.obs.exporter import ROUTES, ObsExporter, start_exporter
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.quality import RouterQualityMonitor
+from repro.obs.slo import SLOEngine, SLORule, default_serving_rules
+
+_PROM_SAMPLE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [^ ]+$")
+
+
+def _get(url, timeout=5):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.headers.get("Content-Type"), r.read()
+
+
+@pytest.fixture
+def world():
+    """Populated scope + running exporter on an ephemeral port."""
+    o = OBS.Observability(enabled=True)
+    o.registry.counter("req_total", "requests", model="a").inc(5)
+    h = o.registry.histogram("lat_us", "latency", bounds=[1.0, 10.0])
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    with o.span("outer"):
+        with o.span("inner"):
+            pass
+    for i in range(6):
+        o.events.emit({"kind": "route", "rid": i, "model": "a"})
+    o.events.emit({"kind": "swap", "gen": 1})
+    mon = RouterQualityMonitor(["a", "b"], [1.0, 2.0],
+                               [1500.0, 1500.0], obs=o)
+    mon.observe_batch([5.0, 5.0], [0, 1])
+    slo = SLOEngine(o.registry, default_serving_rules(), obs=o)
+    with ObsExporter(o, slo=slo, quality=mon) as ex:
+        yield o, ex
+
+
+def test_exporter_all_endpoints_smoke(world):
+    o, ex = world
+    assert ex.port > 0   # ephemeral port resolved
+    for path in ROUTES:
+        status, ct, _ = _get(ex.url(path))
+        assert status == 200, path
+    # scrapes were metered per path in the same registry
+    for path in ROUTES:
+        assert o.registry.value("exporter_scrapes_total", path=path) == 1
+
+
+def test_exporter_metrics_endpoint(world):
+    _, ex = world
+    status, ct, body = _get(ex.url("/metrics"))
+    assert ct == "text/plain; version=0.0.4; charset=utf-8"
+    text = body.decode()
+    for line in text.strip().splitlines():
+        if not line.startswith("#"):
+            assert _PROM_SAMPLE.match(line), line
+    assert 'req_total{model="a"} 5' in text
+    assert "lat_us_count 3" in text
+    assert "slo_status{" in text   # the SLO engine shares the registry
+
+
+def test_exporter_trace_endpoint(world):
+    _, ex = world
+    _, ct, body = _get(ex.url("/trace"))
+    assert ct.startswith("application/json")
+    doc = json.loads(body)
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"outer", "inner"} <= names
+
+
+def test_exporter_decisions_endpoint(world):
+    _, ex = world
+    _, ct, body = _get(ex.url("/decisions?n=3"))
+    assert ct.startswith("application/x-ndjson")
+    recs = [json.loads(l) for l in body.decode().splitlines()]
+    assert [r["rid"] for r in recs] == [3, 4, 5]   # chronological tail
+    assert all(r["kind"] == "route" for r in recs)
+    # kind=all includes the swap event
+    _, _, body = _get(ex.url("/decisions?n=100&kind=all"))
+    kinds = [json.loads(l)["kind"] for l in body.decode().splitlines()]
+    assert "swap" in kinds
+
+
+def test_exporter_healthz_slo_quality(world):
+    o, ex = world
+    _, _, body = _get(ex.url("/healthz"))
+    doc = json.loads(body)
+    assert doc["status"] == "ok" and doc["enabled"]
+    assert doc["events"]["emitted"] == o.events.emitted
+    assert sorted(doc["endpoints"]) == sorted(ROUTES)
+
+    _, _, body = _get(ex.url("/slo"))
+    doc = json.loads(body)
+    assert {r["rule"] for r in doc["rules"]} == {
+        r.name for r in default_serving_rules()}
+    # queue metrics absent in this world -> no_data, never a breach
+    by = {r["rule"]: r for r in doc["rules"]}
+    assert by["queue_wait_p99"]["status"] == "no_data"
+    assert by["queue_wait_p99"]["breaches_total"] == 0
+
+    _, _, body = _get(ex.url("/quality"))
+    doc = json.loads(body)
+    assert doc["decisions"] == 2
+    assert doc["selection_share"] == {"a": 0.5, "b": 0.5}
+
+
+def test_exporter_404_and_stop(world):
+    _, ex = world
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(ex.url("/nope"))
+    assert ei.value.code == 404
+    url = ex.url("/metrics")
+    ex.stop()
+    with pytest.raises(urllib.error.URLError):
+        _get(url, timeout=2)
+    ex.stop()   # idempotent
+
+
+def test_start_exporter_helper():
+    o = OBS.Observability(enabled=True)
+    ex = start_exporter(o)
+    try:
+        status, _, body = _get(ex.url("/slo"))
+        assert status == 200
+        assert json.loads(body)["status"] == "no_rules"
+        _, _, body = _get(ex.url("/quality"))
+        assert json.loads(body)["status"] == "no_monitor"
+    finally:
+        ex.stop()
+
+
+# ---------------------------------------------------------------------------
+# SLO engine semantics
+# ---------------------------------------------------------------------------
+
+def test_slo_rule_roundtrip_and_validation():
+    r = SLORule("r1", "m", "<=", 5.0, stat="p99", help="h")
+    assert SLORule.from_dict(r.as_dict()) == r
+    assert "labels" not in r.as_dict()   # None fields elided
+    with pytest.raises(AssertionError):
+        SLORule("bad", "m", "==", 1.0)
+    with pytest.raises(AssertionError):
+        SLORule("bad", "m", "<=", 1.0, stat="p12")
+
+
+def test_slo_rule_value_stats_and_ratio():
+    reg = MetricsRegistry()
+    h = reg.histogram("wait_us", bounds=[1.0, 10.0, 100.0])
+    for v in [2.0] * 9 + [50.0]:
+        h.observe(v)
+    reg.counter("shed_total").inc(5)
+    reg.counter("sub_total").inc(100)
+    eng = SLOEngine(reg, [
+        SLORule("p99", "wait_us", "<=", 40.0, stat="p99"),
+        SLORule("mean", "wait_us", "<=", 10.0, stat="mean"),
+        SLORule("n", "wait_us", ">=", 10.0, stat="count"),
+        SLORule("rate", "shed_total", "<=", 0.1, per="sub_total"),
+        SLORule("ghost", "absent_metric", "<=", 1.0),
+    ])
+    assert eng.rule_value(eng.rules[1]) == pytest.approx(6.8)
+    assert eng.rule_value(eng.rules[2]) == 10.0
+    assert eng.rule_value(eng.rules[3]) == pytest.approx(0.05)
+    assert eng.rule_value(eng.rules[4]) is None
+    doc = eng.evaluate()
+    by = {r["rule"]: r for r in doc["rules"]}
+    assert by["p99"]["status"] == "breach"   # p99 ~ 50 > 40
+    assert by["mean"]["status"] == "ok"
+    assert by["n"]["status"] == "ok"
+    assert by["rate"]["status"] == "ok"
+    assert by["ghost"]["status"] == "no_data"
+    assert doc["status"] == "breach"         # worst rule wins
+
+
+def test_slo_ratio_zero_denominator_is_no_data():
+    reg = MetricsRegistry()
+    reg.counter("shed_total").inc(3)
+    reg.counter("sub_total")   # value 0
+    eng = SLOEngine(reg, [SLORule("r", "shed_total", "<=", 0.1,
+                                  per="sub_total")])
+    assert eng.rule_value(eng.rules[0]) is None
+
+
+def test_slo_burn_rate_transitions():
+    """ok -> breach -> page (sustained) -> recover, with
+    slo_breach_total counting every breached evaluation."""
+    reg = MetricsRegistry()
+    g = reg.gauge("depth")
+    eng = SLOEngine(reg, [SLORule("depth", "depth", "<=", 10.0)],
+                    short_window=4, long_window=8, page_burn=0.5)
+
+    def status():
+        doc = eng.evaluate()
+        return doc["rules"][0]["status"]
+
+    g.set(5.0)
+    assert [status() for _ in range(8)] == ["ok"] * 8
+    g.set(50.0)
+    # breaches accumulate; page requires burn >= 0.5 over BOTH windows:
+    # short (4) fills after 2 breaches, long (8) after 4
+    assert status() == "breach"
+    assert status() == "breach"
+    assert status() == "breach"
+    assert status() == "page"
+    assert status() == "page"
+    assert reg.value("slo_breach_total", rule="depth") == 5
+    assert reg.value("slo_status", rule="depth") == 2.0
+    g.set(5.0)
+    assert status() == "ok"   # current evaluation governs ok/breach
+    assert reg.value("slo_status", rule="depth") == 0.0
+    assert reg.value("slo_breach_total", rule="depth") == 5
+    assert reg.value("slo_evaluations_total") == 14
+
+
+def test_slo_duplicate_rule_names_rejected():
+    reg = MetricsRegistry()
+    with pytest.raises(AssertionError):
+        SLOEngine(reg, [SLORule("x", "m", "<=", 1.0),
+                        SLORule("x", "m2", "<=", 1.0)])

@@ -321,3 +321,63 @@ def test_compile_counter_concurrent_events_exact():
         t.join()
     assert cc.delta() == n_threads * per_thread
     assert D.xla_compile_count() - start == n_threads * per_thread
+
+
+# ---------------------------------------------------------------------------
+# exposition hardening (DESIGN.md §11): escaping + default-scope isolation
+# ---------------------------------------------------------------------------
+
+def test_prometheus_label_escaping_hostile_values():
+    """A label value containing backslash, double quote, AND newline at
+    once must render as legal 0.0.4 text (one escaped sample line)."""
+    r = MetricsRegistry()
+    hostile = 'a\\b"c\nd'
+    r.counter("esc_total", 'help with \\ and\nnewline',
+              model=hostile).inc(3)
+    text = r.prometheus_text()
+    # every emitted line is still one parseable line (no raw newlines
+    # leaked out of the label value or the HELP text)
+    for line in text.strip().splitlines():
+        if not line.startswith("#"):
+            assert _PROM_SAMPLE.match(line), line
+    assert 'esc_total{model="a\\\\b\\"c\\nd"} 3' in text
+    assert "# HELP esc_total help with \\\\ and\\nnewline" in text
+    # round-trip: un-escaping the rendered value recovers the original
+    m = re.search(r'esc_total\{model="((?:[^"\\]|\\.)*)"\}', text)
+    assert m is not None
+    unescaped = (m.group(1).replace("\\n", "\n").replace('\\"', '"')
+                 .replace("\\\\", "\\"))
+    assert unescaped == hostile
+
+
+def test_event_log_tail():
+    log = EventLog(capacity=64)
+    for i in range(5):
+        log.emit({"kind": "route", "i": i})
+    log.emit({"kind": "swap", "i": 99})
+    log.emit_columns("route", 3, {"b": 1}, {"i": [5, 6, 7]})
+    # plain tail: most recent n, chronological
+    tail4 = log.tail(4)
+    assert [r["i"] for r in tail4] == [99, 5, 6, 7]
+    # kind filter skips non-matching records entirely
+    assert [r["i"] for r in log.tail(4, kind="route")] == [4, 5, 6, 7]
+    assert [r["i"] for r in log.tail(1, kind="swap")] == [99]
+    # n larger than retained -> everything (filtered)
+    assert len(log.tail(100, kind="route")) == 8
+    assert all(r["kind"] == "route" for r in log.tail(100, kind="route"))
+
+
+def test_reset_default_isolates_process_scope():
+    """obs.reset_default() swaps the module default bundle: metrics
+    accumulated before the swap are invisible afterwards (the test-
+    fixture isolation contract; tests/conftest.py applies it autouse)."""
+    old = OBS.reset_default(enabled=False)
+    OBS.get_obs(None).registry.counter("bleed_total").inc(7)
+    assert OBS.get_obs(None).registry.value("bleed_total") == 7
+    new = OBS.reset_default(enabled=True)
+    assert OBS.get_obs(None) is new and new is not old
+    assert OBS.get_obs(None).registry.value("bleed_total") is None
+    assert OBS.get_obs(None).enabled
+    # the old bundle still holds its data (handles cached before the
+    # swap keep working; they just stop being the process default)
+    assert old.registry.value("bleed_total") == 7

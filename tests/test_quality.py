@@ -1,0 +1,327 @@
+"""Router-quality monitor tests (DESIGN.md §11): routing-regret
+exactness against the brute-force oracle (bitwise), EWMA drift-detector
+behaviour (quiet on stationary noise, fires once on a level shift),
+monitor end-to-end accounting, and decision-log replay determinism
+under an injected clock."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro import obs as OBS
+from repro.obs.quality import (DriftDetector, QualityConfig,
+                               RouterQualityMonitor, routing_regret,
+                               routing_regret_oracle)
+
+
+# ---------------------------------------------------------------------------
+# routing regret: exactness
+# ---------------------------------------------------------------------------
+
+def test_regret_matches_oracle_bitwise_randomized():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        m = int(rng.integers(2, 9))
+        b = int(rng.integers(1, 33))
+        ratings = rng.normal(1500.0, 120.0, m)
+        costs = rng.uniform(0.5, 10.0, m)
+        # budgets span infeasible (< min cost), partial, and full
+        budgets = rng.uniform(0.0, 12.0, b)
+        choices = rng.integers(0, m, b)
+        got = routing_regret(ratings, costs, budgets, choices)
+        want = routing_regret_oracle(ratings, costs, budgets, choices)
+        assert got.dtype == want.dtype == np.float64
+        assert np.array_equal(got, want)   # bitwise, not allclose
+
+
+def test_regret_zero_when_choice_is_best_feasible():
+    ratings = [1500.0, 1600.0, 1400.0]
+    costs = [1.0, 4.0, 8.0]
+    # budget 5: models 0,1 feasible, best is 1
+    assert routing_regret(ratings, costs, [5.0], [1])[0] == 0.0
+    assert routing_regret(ratings, costs, [5.0], [0])[0] == 100.0
+    # budget 2: only model 0 feasible
+    assert routing_regret(ratings, costs, [2.0], [0])[0] == 0.0
+
+
+def test_regret_infeasible_budget_uses_cheapest_fallback():
+    """Nothing feasible -> the reference point is the cheapest model
+    (mirroring select_within_budget's fallback), so choosing it scores
+    zero regret and choosing a better-rated model scores negative."""
+    ratings = np.array([1500.0, 1650.0])
+    costs = np.array([1.0, 4.0])
+    r = routing_regret(ratings, costs, [0.5, 0.5], [0, 1])
+    assert r[0] == 0.0
+    assert r[1] == ratings[0] - ratings[1] < 0
+    want = routing_regret_oracle(ratings, costs, [0.5, 0.5], [0, 1])
+    assert np.array_equal(r, want)
+
+
+def test_regret_boundary_cost_equals_budget():
+    # cost == budget is feasible (mirrors cost <= budget in the kernel)
+    r = routing_regret([1500.0, 1600.0], [1.0, 4.0], [4.0], [0])
+    assert r[0] == 100.0
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+
+def test_drift_detector_quiet_on_stationary_noise():
+    rng = np.random.default_rng(7)
+    det = DriftDetector(alpha=0.05, z_threshold=6.0, min_samples=32)
+    fired = [det.update(x) for x in rng.normal(1500.0, 5.0, 5000)]
+    assert not any(z is not None for z in fired)
+
+
+def test_drift_detector_fires_once_then_readapts():
+    rng = np.random.default_rng(3)
+    det = DriftDetector(alpha=0.05, z_threshold=6.0, min_samples=32)
+    for x in rng.normal(1500.0, 5.0, 500):
+        assert det.update(x) is None
+    # injected level shift: an immediate large |z|
+    z = det.update(1900.0)
+    assert z is not None and z > 6.0
+    # the shift is folded in; at the new level the detector re-adapts
+    # rather than alarming forever
+    post = [det.update(x) for x in rng.normal(1900.0, 5.0, 500)]
+    assert sum(z is not None for z in post) <= 3
+    assert all(z is None for z in post[-400:])
+
+
+def test_drift_detector_respects_min_samples():
+    det = DriftDetector(min_samples=32)
+    for i in range(31):
+        # wildly non-stationary, but still in warmup -> silent
+        assert det.update(float(i * 1000)) is None
+
+
+def test_drift_detector_variance_floor_on_flat_series():
+    det = DriftDetector(min_samples=4, min_std=1e-6)
+    for _ in range(100):
+        assert det.update(1500.0) is None   # zero variance, no fire
+
+
+# ---------------------------------------------------------------------------
+# the monitor end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def mon():
+    o = OBS.Observability(enabled=True)
+    return RouterQualityMonitor(
+        ["a", "b", "c"], costs=[1.0, 2.0, 4.0],
+        ratings=[1500.0, 1550.0, 1450.0],
+        cfg=QualityConfig(min_samples=8, window=16), obs=o)
+
+
+def test_monitor_score_batch_accounting(mon):
+    regret = mon.score_batch([5.0, 5.0, 1.5, 0.5], [1, 0, 0, 0])
+    want = routing_regret_oracle(mon.ratings, mon.costs,
+                                 [5.0, 5.0, 1.5, 0.5], [1, 0, 0, 0])
+    assert np.array_equal(regret, want)
+    share = mon.selection_share()
+    assert share == {"a": 0.75, "b": 0.25, "c": 0.0}
+    snap = mon.snapshot()
+    assert snap["decisions"] == 4
+    assert snap["regret"]["count"] == 4
+    assert snap["regret"]["sum"] == pytest.approx(float(want.sum()))
+    r = mon.obs.registry
+    assert r.value("quality_decisions_total") == 4
+    assert r.value("quality_selected_total", model="a") == 3
+    assert r.value("quality_regret_last") == pytest.approx(
+        float(want.mean()))
+
+
+def test_monitor_win_rate_and_feedback(mon):
+    # a beats b twice, c beats a once, one tie (outcome 0.5 -> no win)
+    mon.observe_feedback([0, 0, 2, 1], [1, 1, 0, 2],
+                         [1.0, 1.0, 1.0, 0.5])
+    wr = mon.win_rate()
+    assert wr["a"] == pytest.approx(2 / 3)   # 2 wins / 3 comparisons
+    assert wr["b"] == 0.0
+    assert wr["c"] == pytest.approx(1 / 2)
+    assert np.isnan(RouterQualityMonitor(
+        ["x"], [1.0], [1500.0], obs=mon.obs).win_rate()["x"])
+
+
+def test_monitor_trajectories_bounded_and_refreshed(mon):
+    rng = np.random.default_rng(0)
+    base = np.array([1500.0, 1550.0, 1450.0])
+    for _ in range(40):   # > window=16 folds
+        mon.observe_ratings(base + rng.normal(0, 1.0, 3))
+    for m in mon.model_names:
+        assert len(mon.trajectories[m]) == 16
+    # gauges track the last fold
+    last = mon.trajectories["a"][-1][1]
+    assert mon.obs.registry.value("quality_rating", model="a") == last
+    assert mon.ratings[0] == last
+
+
+def test_monitor_alert_on_injected_rating_step(mon):
+    rng = np.random.default_rng(1)
+    base = np.array([1500.0, 1550.0, 1450.0])
+    for _ in range(64):
+        mon.observe_ratings(base + rng.normal(0, 2.0, 3))
+    assert mon.alerts_fired == 0
+    shifted = base + np.array([400.0, 0.0, 0.0])   # model "a" jumps
+    mon.observe_ratings(shifted + rng.normal(0, 2.0, 3))
+    assert mon.alerts_fired >= 1
+    alerts = mon.obs.events.records("quality_alert")
+    assert len(alerts) >= 1
+    a = alerts[0]
+    assert a["alert"] == "rating_drift" and a["model"] == "a"
+    assert abs(a["z"]) > mon.cfg.z_threshold
+    assert mon.obs.registry.value("quality_alerts_total",
+                                  kind="rating_drift") >= 1
+
+
+def test_monitor_regret_drift_alert(mon):
+    rng = np.random.default_rng(2)
+    # stationary: every batch routes optimally under a generous budget
+    for _ in range(64):
+        mon.observe_batch(rng.uniform(4.0, 8.0, 8), [1] * 8)
+    mon.flush()
+    assert mon.alerts_fired == 0
+    # regression: suddenly always picking the worst-rated model
+    mon.observe_batch(rng.uniform(4.0, 8.0, 8), [2] * 8)
+    mon.flush()
+    assert mon.obs.registry.value("quality_alerts_total",
+                                  kind="regret_drift") >= 1
+
+
+def test_monitor_observe_batch_is_deferred(mon):
+    """The hot-path hook captures refs only; scoring lands at flush/
+    readout time (the O(1)-per-batch contract)."""
+    mon.observe_batch([5.0, 5.0], [0, 1])
+    # decisions counter is eager, scored artifacts are not
+    assert mon.obs.registry.value("quality_decisions_total") == 2
+    assert mon.obs.registry.value("quality_selected_total", model="a") == 0
+    assert mon._h_regret.count == 0
+    assert mon.flush() == 1
+    assert mon.obs.registry.value("quality_selected_total", model="a") == 1
+    assert mon._h_regret.count == 2
+    assert mon.flush() == 0   # idempotent once drained
+
+
+def test_monitor_max_pending_overflow_flushes_inline():
+    o = OBS.Observability(enabled=True)
+    m = RouterQualityMonitor(
+        ["a", "b"], [1.0, 2.0], [1500.0, 1550.0],
+        cfg=QualityConfig(max_pending=4), obs=o)
+    for _ in range(4):
+        m.observe_batch([5.0], [0])
+    assert m._h_regret.count == 4   # 4th append tripped the guard
+    assert len(m._pending) == 0
+
+
+def test_monitor_disabled_scope_emits_no_events():
+    o = OBS.Observability(enabled=False)
+    m = RouterQualityMonitor(["a", "b"], [1.0, 2.0], [1500.0, 1500.0],
+                             cfg=QualityConfig(min_samples=2), obs=o)
+    m.observe_batch([5.0], [0])
+    m.observe_ratings([1500.0, 1500.0])
+    # metrics are ALWAYS on (§9 contract)...
+    assert o.registry.value("quality_decisions_total") == 1
+    # ...but a disabled EventLog drops alert records
+    for _ in range(8):
+        m.observe_ratings([1500.0, 1500.0])
+    m.observe_ratings([9999.0, 1500.0])
+    assert o.events.records("quality_alert") == []
+
+
+# ---------------------------------------------------------------------------
+# serving integration: replay determinism + monitor attachment
+# ---------------------------------------------------------------------------
+
+class _StubModel:
+    """Duck-typed fleet entry: generate() shape contract only."""
+
+    def generate(self, tokens, max_new):
+        return np.zeros((tokens.shape[0], max_new), np.int32)
+
+
+def _small_router(dim=16, seed=0):
+    from repro.core.router import EagleConfig, EagleRouter
+    rng = np.random.default_rng(seed)
+    names = ["a", "b"]
+    router = EagleRouter(names, [1.0, 4.0], EagleConfig(embed_dim=dim),
+                         db_capacity=128)
+    n = 24
+    emb = rng.normal(size=(n, dim)).astype(np.float32)
+    ma = rng.integers(0, 2, n)
+    router.fit(emb, ma, 1 - ma, rng.integers(0, 2, n).astype(np.float32))
+    return router
+
+
+def _counter_clock(start=1_000_000_000, step=1_000_000):
+    c = itertools.count(start, step)
+    return lambda: next(c)
+
+
+def _serve_once(dim=16):
+    """One engine + stub fleet + injected counter clock over a fixed
+    request set; returns the expanded decision log."""
+    from repro.serving.engine import Request, ServingEngine
+    o = OBS.Observability(enabled=True)
+    router = _small_router(dim)
+    fleet = {"a": _StubModel(), "b": _StubModel()}
+    eng = ServingEngine(fleet, router, compare_rate=0.0, seed=0,
+                        quality_oracle=None, obs=o,
+                        now_ns=_counter_clock())
+    rng = np.random.default_rng(42)
+    reqs = [Request(tokens=rng.integers(0, 64, 6).astype(np.int32),
+                    embedding=rng.normal(size=dim).astype(np.float32),
+                    budget=float(b), max_new_tokens=2, rid=k)
+            for k, b in enumerate(rng.uniform(0.5, 6.0, 12))]
+    for i in range(0, len(reqs), 4):
+        eng.serve(reqs[i:i + 4])
+    return o.events.records("route")
+
+
+def test_decision_log_replay_determinism():
+    """Two identically-seeded serves with the injectable clock produce
+    IDENTICAL decision logs — including the `ts` field, which wall
+    clocks would perturb (the /decisions replay contract)."""
+    a, b = _serve_once(), _serve_once()
+    assert len(a) == 12
+    assert a == b
+    # the injected clock is visible verbatim: one tick per batch,
+    # starting at 1.0s and stepping 1ms
+    ts = sorted({r["ts"] for r in a})
+    assert ts == [1.0, 1.001, 1.002]
+
+
+def test_engine_feeds_quality_monitor():
+    from repro.serving.engine import Request, ServingEngine
+    o = OBS.Observability(enabled=True)
+    router = _small_router()
+    mon = RouterQualityMonitor.for_router(router, obs=o)
+    eng = ServingEngine({"a": _StubModel(), "b": _StubModel()}, router,
+                        compare_rate=0.0, obs=o, quality=mon)
+    assert router.quality is mon
+    rng = np.random.default_rng(0)
+    reqs = [Request(tokens=np.arange(4, dtype=np.int32),
+                    embedding=rng.normal(size=16).astype(np.float32),
+                    budget=5.0, max_new_tokens=2, rid=k)
+            for k in range(6)]
+    eng.serve(reqs)
+    assert o.registry.value("quality_decisions_total") == 6
+    assert sum(mon.selection_share().values()) == pytest.approx(1.0)
+
+
+def test_router_feedback_feeds_quality_monitor():
+    o = OBS.Observability(enabled=True)
+    router = _small_router()
+    router.obs = o
+    mon = RouterQualityMonitor.for_router(router, obs=o)
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(4, 16)).astype(np.float32)
+    router.feedback(emb, [0, 1, 0, 1], [1, 0, 1, 0],
+                    [1.0, 0.0, 1.0, 1.0])
+    # the fold reached the monitor: one trajectory point per model,
+    # ratings synced to the post-fold vector
+    assert mon.snapshot()["feedback_folds"] == 1
+    np.testing.assert_array_equal(
+        mon.ratings, np.asarray(router.global_ratings, np.float64))
+    assert o.registry.value("quality_comparisons_total", model="a") == 4
