@@ -145,7 +145,7 @@ class _RaggedWorld:
     feedback cycle, warmed so the loop itself never compiles."""
 
     def __init__(self, smoke: bool, n_steps: int, commit_every: int = 20,
-                 obs=None):
+                 obs=None, mesh=None):
         self.n_steps = n_steps
         self.max_batch = 64 if smoke else 256
         self.commit_every = commit_every
@@ -157,10 +157,14 @@ class _RaggedWorld:
         self.bud_lo = float(corpus.costs.min())
         self.bud_hi = float(corpus.costs.max())
         self.costs = np.asarray(corpus.costs, np.float32)
+        # mesh: capacity-shard the routing DB (DESIGN.md §12) — the
+        # dispatcher caches sharded executables, commits owner-scatter
+        self.mesh = mesh
         self.dispatch = RouteDispatcher.for_router(
-            self.router, max_bucket=self.max_batch, obs=obs)
+            self.router, max_bucket=self.max_batch, obs=obs, mesh=mesh)
         self.dbuf = DoubleBuffer(self.router.db,
-                                 self.router.global_ratings, obs=obs)
+                                 self.router.global_ratings, obs=obs,
+                                 mesh=mesh)
         self.router.obs = obs
         # the loop appends rows; make sure it cannot outgrow the buffer
         # mid-run (a _grow() realloc is a new shape signature =
@@ -282,6 +286,113 @@ def run_ragged(verbose: bool = True, smoke: bool = False,
             f"steady-state violation: {compiles} XLA compilation(s) "
             f"after warmup (expected 0) — dispatch stats: "
             f"{dispatch.cache_stats()}")
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# sharded routing gate (ci.sh --assert-sharded)
+# ---------------------------------------------------------------------------
+
+def _reexec_with_devices(n: int):
+    """The forced-host-device XLA flag must be set before jax
+    initializes; jax imported at this module's top, so when the process
+    lacks devices for an N-shard mesh the run re-execs itself with the
+    flag merged into XLA_FLAGS. Returns the child's exit code, or None
+    when this process already has enough devices."""
+    if jax.device_count() >= n:
+        return None
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}"
+                        ).strip()
+    return subprocess.call(
+        [sys.executable, "-m", "benchmarks.route_batch_bench",
+         *sys.argv[1:]], env=env)
+
+
+def run_sharded(verbose: bool = True, smoke: bool = False,
+                mesh_n: int = 2, assert_sharded: bool = False):
+    """Steady-state ragged loop over a capacity-sharded RouterState
+    (DESIGN.md §12): same traffic shape as --ragged, but the dispatch
+    cache holds sharded executables and every commit owner-scatters
+    over the DB mesh. Reports latency + the post-warmup compile count
+    and cross-checks the sharded choices against the single-device
+    oracle, bitwise; writes the `sharded` section of BENCH_route.json.
+    With --assert-sharded, any post-warmup compile or any oracle
+    mismatch exits non-zero — the ci.sh gate."""
+    from repro.core.state import route_batch_choices, state_from_buffer
+    from repro.launch.mesh import make_db_mesh
+
+    n_steps = 60 if smoke else 300
+    mesh = make_db_mesh(mesh_n)
+    w = _RaggedWorld(smoke, n_steps, mesh=mesh)
+    warm_s, warm_routes = w.warmup()
+
+    lat_us = []
+    with CompileCounter() as cc:
+        for step in range(n_steps):
+            q, budgets = w.next_batch()
+            t0 = time.perf_counter()
+            w.dispatch.route(w.dbuf.front, q, budgets)
+            lat_us.append((time.perf_counter() - t0) * 1e6)
+            if (step + 1) % w.commit_every == 0:
+                w.feedback_cycle()
+    compiles = cc.delta()
+
+    # oracle cross-check OUTSIDE the counted region (the single-device
+    # reference is its own executable): routing is pure, so fresh
+    # batches over the final state are a sound equivalence probe
+    kw = w.router._kw()
+    checked = mismatches = 0
+    oracle = state_from_buffer(w.router.db, w.router.global_ratings)
+    for _ in range(8):
+        q, budgets = w.next_batch()
+        got = w.dispatch.route(w.dbuf.front, q, budgets)
+        want = np.asarray(route_batch_choices(
+            oracle, q, budgets, w.costs, **kw).choices)
+        checked += len(got)
+        mismatches += int((got != want).sum())
+
+    p50, p90, p99 = (float(np.percentile(lat_us, p)) for p in (50, 90, 99))
+    payload = {
+        "mesh": mesh_n,
+        "smoke": smoke,
+        "steps": n_steps,
+        "max_batch": w.max_batch,
+        "commit_every": w.commit_every,
+        "route_p50_us": p50,
+        "route_p90_us": p90,
+        "route_p99_us": p99,
+        "warmup_s": warm_s,
+        "warmup_route_executables": warm_routes,
+        "post_warmup_xla_compiles": compiles,
+        "oracle_rows_checked": checked,
+        "oracle_mismatches": mismatches,
+        "dispatch": {k: v for k, v in w.dispatch.cache_stats().items()
+                     if k != "keys"},
+    }
+    _merge_bench_json({"sharded": payload})
+    C.save_json("route_sharded_bench.json", payload)
+    if verbose:
+        print(f"[route_sharded] mesh={mesh_n} steps={n_steps} "
+              f"p50={p50:.0f}us p90={p90:.0f}us p99={p99:.0f}us "
+              f"warmup={warm_s:.1f}s ({warm_routes} executables) "
+              f"post_warmup_compiles={compiles} "
+              f"oracle={checked - mismatches}/{checked} rows equal")
+    if assert_sharded:
+        if compiles != 0:
+            raise SystemExit(
+                f"sharded gate: {compiles} XLA compilation(s) after "
+                f"warmup on the {mesh_n}-shard mesh (expected 0) — "
+                f"dispatch stats: {w.dispatch.cache_stats()}")
+        if mismatches:
+            raise SystemExit(
+                f"sharded gate: {mismatches}/{checked} choices diverge "
+                f"from the single-device oracle on the {mesh_n}-shard "
+                f"mesh (expected bit-identical)")
     return payload
 
 
@@ -531,8 +642,21 @@ if __name__ == "__main__":
                     help="telemetry gate: <5%% p50 overhead, valid "
                          "trace/Prometheus/JSONL artifacts, zero "
                          "post-warmup compiles")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="run the ragged loop over an N-shard DB mesh "
+                         "(re-execs with forced host devices if needed)")
+    ap.add_argument("--assert-sharded", action="store_true",
+                    help="with --mesh: fail on any post-warmup compile "
+                         "or any divergence from the single-device "
+                         "oracle")
     args = ap.parse_args()
-    if args.obs or args.assert_obs:
+    if args.mesh:
+        rc = _reexec_with_devices(args.mesh)
+        if rc is not None:
+            raise SystemExit(rc)
+        run_sharded(smoke=args.smoke, mesh_n=args.mesh,
+                    assert_sharded=args.assert_sharded)
+    elif args.obs or args.assert_obs:
         run_obs_gate(smoke=args.smoke, assert_obs=args.assert_obs,
                      trace_path=args.trace)
     elif args.ragged:

@@ -35,6 +35,14 @@
 # overload the shed clamp must keep queue depth stationary (no
 # monotonic growth) with still zero rejects. --assert-queue exits
 # non-zero on any violation and merges results into BENCH_queue.json.
+#
+# The sharded gate (DESIGN.md §12) holds capacity-sharded routing to
+# its contract: the equivalence suite (bit-identical choices + commit
+# state on 1/2/4-shard forced-host meshes, all modes, both backends)
+# plus a ragged serving loop on a 4-shard mesh that must trigger zero
+# post-warmup compiles and match the single-device oracle bitwise.
+# --assert-sharded exits non-zero on any violation and writes the
+# `sharded` section of BENCH_route.json.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -65,5 +73,13 @@ echo
 echo "===== router-quality gate (regret bit-exact, drift alerts) ====="
 python -m benchmarks.queue_bench --smoke \
     --assert-quality || status=$((status ? status : $?))
+
+echo
+echo "===== sharded routing gate (bit-identical oracle, 0 compiles) ====="
+python -m pytest -q tests/test_sharded_state.py \
+    || status=$((status ? status : $?))
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
+python -m benchmarks.route_batch_bench --smoke --mesh 4 \
+    --assert-sharded || status=$((status ? status : $?))
 
 exit "$status"

@@ -28,15 +28,21 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from functools import partial
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import obs as OBS
+from repro import sharding as SHARD
 from repro.core import elo
-from repro.core.state import RouterState, route_batch_choices
+from repro.core import state as STATE
+from repro.core.state import (RouterState, route_batch_choices,
+                              route_batch_choices_sharded,
+                              state_shardings)
 
 #: default bucket ladder bounds (powers of two, inclusive)
 MIN_BUCKET = 8
@@ -127,6 +133,31 @@ def bucket_ladder(min_bucket: int = MIN_BUCKET,
     return tuple(out)
 
 
+def abstract_state(n_models: int, dim: int, capacity: int, records: int,
+                   mesh: Optional[Mesh] = None) -> RouterState:
+    """RouterState of ShapeDtypeStructs: the full shape signature of a
+    dispatch with no arrays allocated — AOT lowering only reads
+    avals/shardings, so this is what warmup_shapes()/the capacity
+    prebaker feed the cache. With a DB mesh, leaves carry the
+    capacity-partition NamedShardings so the baked executable accepts
+    the concrete sharded states commits produce."""
+    sh = state_shardings(mesh) if mesh is not None else None
+
+    def sd(shape, dtype, field):
+        return jax.ShapeDtypeStruct(
+            shape, dtype,
+            sharding=getattr(sh, field) if sh is not None else None)
+
+    return RouterState(
+        global_ratings=sd((n_models,), jnp.float32, "global_ratings"),
+        emb=sd((capacity, dim), jnp.float32, "emb"),
+        model_a=sd((capacity, records), jnp.int32, "model_a"),
+        model_b=sd((capacity, records), jnp.int32, "model_b"),
+        outcome=sd((capacity, records), jnp.float32, "outcome"),
+        valid=sd((capacity, records), bool, "valid"),
+        size=sd((), jnp.int32, "size"))
+
+
 @dataclasses.dataclass
 class DispatchStats:
     hits: int = 0
@@ -152,8 +183,17 @@ class RouteDispatcher:
                  init_rating: float = elo.DEFAULT_RATING,
                  min_bucket: int = MIN_BUCKET,
                  max_bucket: int = MAX_BUCKET,
+                 mesh: Optional[Mesh] = None,
                  obs: Optional["OBS.Observability"] = None):
+        # with a DB mesh the cached executables are the capacity-sharded
+        # route (DESIGN.md §12); replicated operands (costs, queries,
+        # budgets) are committed to the mesh so AOT calls see the exact
+        # shardings they were lowered with
+        self.mesh = mesh
+        self._rep = None if mesh is None else NamedSharding(mesh, P())
         self.costs = jnp.asarray(costs, jnp.float32)
+        if self._rep is not None:
+            self.costs = jax.device_put(self.costs, self._rep)
         self.kw = dict(p_global=float(p_global),
                        n_neighbors=int(n_neighbors), k=float(k),
                        backend=backend, mode=mode,
@@ -220,7 +260,7 @@ class RouteDispatcher:
 
     def _key(self, state: RouterState, qb: int) -> Tuple:
         return (qb, state.capacity, state.records_per_query,
-                self.kw["mode"], self.kw["backend"])
+                self.kw["mode"], self.kw["backend"], self.mesh)
 
     def _compiled(self, state: RouterState, qb: int, warm: bool = False):
         key = self._key(state, qb)
@@ -236,11 +276,20 @@ class RouteDispatcher:
                 import time
                 t0 = time.perf_counter()
                 with self.obs.span(f"dispatch.compile.q{qb}"):
-                    q = jax.ShapeDtypeStruct((qb, state.dim), jnp.float32)
-                    b = jax.ShapeDtypeStruct((qb,), jnp.float32)
-                    c = jax.ShapeDtypeStruct(self.costs.shape, jnp.float32)
-                    fn = route_batch_choices.lower(
-                        state, q, b, c, **self.kw).compile()
+                    q = jax.ShapeDtypeStruct((qb, state.dim), jnp.float32,
+                                             sharding=self._rep)
+                    b = jax.ShapeDtypeStruct((qb,), jnp.float32,
+                                             sharding=self._rep)
+                    c = jax.ShapeDtypeStruct(self.costs.shape,
+                                             jnp.float32,
+                                             sharding=self._rep)
+                    if self.mesh is None:
+                        fn = route_batch_choices.lower(
+                            state, q, b, c, **self.kw).compile()
+                    else:
+                        fn = route_batch_choices_sharded.lower(
+                            state, q, b, c, mesh=self.mesh,
+                            **self.kw).compile()
                 self._cache[key] = fn
                 self.stats.misses += 1
                 self.stats.warmed += bool(warm)
@@ -267,6 +316,16 @@ class RouteDispatcher:
         for qb in buckets:
             self._compiled(state, qb, warm=True)
         return self.stats.misses - before
+
+    def warmup_shapes(self, capacity: int, records: int, dim: int,
+                      batch_sizes: Optional[Sequence[int]] = None) -> int:
+        """warmup() from a bare shape signature (no concrete state):
+        AOT lowering needs only avals, so the ladder for a capacity the
+        DB hasn't grown to YET can bake in the background — this is the
+        CapacityPrebaker's entry point."""
+        st = abstract_state(int(self.costs.shape[0]), dim, capacity,
+                            records, self.mesh)
+        return self.warmup(st, batch_sizes)
 
     def cache_stats(self) -> Dict:
         """Eviction-free readout: nothing is ever dropped, so misses is
@@ -323,6 +382,9 @@ class RouteDispatcher:
             if qb != nq:
                 q = np.pad(q, ((0, qb - nq), (0, 0)))
                 b = np.pad(b, (0, qb - nq))
+            if self._rep is not None:
+                q = jax.device_put(q, self._rep)
+                b = jax.device_put(b, self._rep)
             res = self._compiled(state, qb)(state, q, b, self.costs)
             return np.asarray(res.choices)[:nq]
 
@@ -348,6 +410,9 @@ class RouteDispatcher:
         with self.obs.span("dispatch.route_result"):
             qp = np.pad(q, ((0, qb - nq), (0, 0))) if qb != nq else q
             bp = np.pad(b, (0, qb - nq)) if qb != nq else b
+            if self._rep is not None:
+                qp = jax.device_put(qp, self._rep)
+                bp = jax.device_put(bp, self._rep)
             res = self._compiled(state, qb)(state, qp, bp, self.costs)
             return (np.asarray(res.choices)[:nq],
                     np.asarray(res.topk_idx)[:nq])
@@ -366,3 +431,117 @@ class RouteDispatcher:
                  for lo, hi in self._chunks(nq)]
         return (np.concatenate([p[0] for p in parts]),
                 np.concatenate([p[1] for p in parts]))
+
+
+# ---------------------------------------------------------------------------
+# capacity prebaker: grow the cache BEFORE the DB grows
+# ---------------------------------------------------------------------------
+
+class CapacityPrebaker:
+    """Background pre-bake of the NEXT capacity bucket's executables.
+
+    A VectorDB._grow() doubles the panel shapes, which invalidates every
+    cached route executable AND the commit scatter's jit entry — without
+    preparation the first post-grow dispatch eats the full ladder
+    recompile on the hot path. poll() is a cheap post-commit hook: once
+    the buffer fills past `watermark`, a daemon thread AOT-bakes the
+    dispatch ladder for db.next_capacity() from abstract avals
+    (warmup_shapes) and runs one dummy scatter at the new shapes so the
+    commit path's jit cache is warm too. By the time _grow() trips, the
+    shape change costs only the one-off full re-upload (transfers, zero
+    compiles).
+
+    join() is the determinism hook for tests/benches; serving loops just
+    poll and let the thread finish in the background."""
+
+    def __init__(self, dispatch: RouteDispatcher, db, *,
+                 watermark: float = 0.75,
+                 batch_sizes: Optional[Sequence[int]] = None,
+                 warm_scatter: bool = True,
+                 obs: Optional["OBS.Observability"] = None):
+        self.dispatch = dispatch
+        self.db = db
+        self.watermark = watermark
+        self.batch_sizes = batch_sizes
+        self.warm_scatter = warm_scatter
+        self._thread: Optional[threading.Thread] = None
+        self._baked = {db.capacity}
+        self.obs = OBS.get_obs(obs)
+        self._m_bakes = self.obs.registry.counter(
+            "dispatch_prebake_total", "background next-capacity bakes")
+        self._m_bake_s = self.obs.registry.counter(
+            "dispatch_prebake_seconds_total", "time spent prebaking")
+
+    def poll(self) -> bool:
+        """Post-commit hook: start a bake if the fill watermark is
+        crossed and the next capacity isn't covered yet. Returns
+        whether a bake was started."""
+        if self._thread is not None and self._thread.is_alive():
+            return False
+        if self.db.size < self.watermark * self.db.capacity:
+            return False
+        nxt = self.db.next_capacity()
+        if nxt in self._baked:
+            return False
+        self._baked.add(nxt)
+        self._thread = threading.Thread(
+            target=self._bake, args=(nxt, self.db.rcap, self.db.dim),
+            name="capacity-prebake", daemon=True)
+        self._thread.start()
+        return True
+
+    def join(self, timeout: Optional[float] = None):
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def _bake(self, capacity: int, records: int, dim: int):
+        import time
+        t0 = time.perf_counter()
+        n = self.dispatch.warmup_shapes(capacity, records, dim,
+                                        self.batch_sizes)
+        if self.warm_scatter:
+            self._warm_scatter(capacity, records, dim)
+        dt = time.perf_counter() - t0
+        self._m_bakes.inc()
+        self._m_bake_s.inc(dt)
+        self.obs.emit({"kind": "dispatch_prebake", "capacity": capacity,
+                       "records": records, "executables": n,
+                       "seconds": dt})
+
+    def _warm_scatter(self, capacity: int, records: int, dim: int):
+        """Execute one dummy commit scatter at the next-capacity shapes
+        (the smallest row bucket — the common case). jit call caches
+        key on shapes, so the later real scatter is a hit; the dummy
+        buffers are donated and freed immediately."""
+        bucket = elo._pad_bucket(1)
+        mesh = self.dispatch.mesh
+        if mesh is None:
+            panels = (jnp.zeros((capacity, dim), jnp.float32),
+                      jnp.zeros((capacity, records), jnp.int32),
+                      jnp.zeros((capacity, records), jnp.int32),
+                      jnp.zeros((capacity, records), jnp.float32),
+                      jnp.zeros((capacity, records), bool))
+            STATE._scatter_rows(
+                *panels, jnp.zeros((bucket,), jnp.int32),
+                jnp.zeros((bucket, dim), jnp.float32),
+                jnp.zeros((bucket, records), jnp.int32),
+                jnp.zeros((bucket, records), jnp.int32),
+                jnp.zeros((bucket, records), jnp.float32),
+                jnp.zeros((bucket, records), bool))
+            return
+        shards = SHARD.db_shard_count(mesh)
+        shr = NamedSharding(mesh, P(SHARD.DB_AXIS))
+        put = partial(jax.device_put, device=shr)
+        nb = shards * bucket
+        STATE._sharded_scatter(mesh)(
+            put(np.zeros((capacity, dim), np.float32)),
+            put(np.zeros((capacity, records), np.int32)),
+            put(np.zeros((capacity, records), np.int32)),
+            put(np.zeros((capacity, records), np.float32)),
+            put(np.zeros((capacity, records), bool)),
+            put(np.zeros((nb,), np.int32)),
+            put(np.zeros((nb, dim), np.float32)),
+            put(np.zeros((nb, records), np.int32)),
+            put(np.zeros((nb, records), np.int32)),
+            put(np.zeros((nb, records), np.float32)),
+            put(np.zeros((nb, records), bool)))

@@ -23,13 +23,16 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import obs as OBS
+from repro import sharding as SHARD
 from repro.core import elo
 from repro.kernels import ops as KOPS
 
@@ -139,8 +142,94 @@ def _scatter_rows(emb, model_a, model_b, outcome, valid, rows,
             valid.at[rows].set(v_rows))
 
 
+# ---------------------------------------------------------------------------
+# capacity-sharded state: placement, routing, commit (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def state_shardings(mesh: Mesh) -> RouterState:
+    """RouterState-shaped tree of NamedShardings for the capacity
+    partition (sharding.db_state_specs): DB panels split dim 0 over
+    DB_AXIS, ratings/size replicate."""
+    specs = SHARD.db_state_specs()
+    return RouterState(**{f: NamedSharding(mesh, s)
+                          for f, s in specs.items()})
+
+
+def shard_state(state: RouterState, mesh: Mesh) -> RouterState:
+    """Place a RouterState onto a DB mesh (contiguous capacity split)."""
+    SHARD.check_db_mesh(mesh, state.capacity)
+    return jax.tree.map(jax.device_put, state, state_shardings(mesh))
+
+
+_SHARDED_SCATTER: Dict[Mesh, "jax.stages.Wrapped"] = {}
+
+
+def _sharded_scatter(mesh: Mesh):
+    """Jitted owner-scatter for a DB mesh, cached per mesh. Inputs are
+    per-shard stacks sharded over DB_AXIS — shard s receives ONLY the
+    rows it owns (local indices + payload), so each dirty row crosses
+    the host boundary toward exactly one device. Padding entries repeat
+    a row the shard owns with that row's host content, which makes the
+    duplicate writes idempotent (same guarantee the unsharded scatter's
+    repeat-first-row padding relies on)."""
+    fn = _SHARDED_SCATTER.get(mesh)
+    if fn is not None:
+        return fn
+    spec = P(SHARD.DB_AXIS)
+
+    def body(emb, model_a, model_b, outcome, valid, rows,
+             emb_rows, a_rows, b_rows, o_rows, v_rows):
+        return (emb.at[rows].set(emb_rows),
+                model_a.at[rows].set(a_rows),
+                model_b.at[rows].set(b_rows),
+                outcome.at[rows].set(o_rows),
+                valid.at[rows].set(v_rows))
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,) * 11,
+                           out_specs=(spec,) * 5, check_rep=False),
+                 donate_argnums=(0, 1, 2, 3, 4))
+    _SHARDED_SCATTER[mesh] = fn
+    return fn
+
+
+def _commit_sharded(db, global_ratings, prev: Optional[RouterState],
+                    consumer: str, mesh: Mesh) -> RouterState:
+    """Sharded commit(): drain the ledger grouped by OWNING shard and
+    scatter each group only to its shard (donated buffers). Falls back
+    to a full sharded upload on a shape change, like the unsharded
+    path. Replicated leaves (ratings, size) are re-placed on the mesh
+    every commit so the state's shardings stay AOT-executable-stable."""
+    shards = SHARD.check_db_mesh(mesh, db.capacity)
+    per_shard = db.drain_dirty_sharded(consumer, shards)
+    if (prev is None or prev.emb.shape != db.emb.shape
+            or prev.model_a.shape != db.model_a.shape):
+        return shard_state(state_from_buffer(db, global_ratings), mesh)
+    rep = NamedSharding(mesh, P())
+    g = jax.device_put(jnp.asarray(global_ratings, jnp.float32), rep)
+    size = jax.device_put(jnp.int32(db.size), rep)
+    if not any(r.size for r in per_shard):
+        return dataclasses.replace(prev, global_ratings=g, size=size)
+    c_local = db.capacity // shards
+    bucket = elo._pad_bucket(max(r.size for r in per_shard))
+    rows = np.empty((shards, bucket), np.int32)   # GLOBAL row ids
+    for s, r in enumerate(per_shard):
+        pad = r[0] if r.size else s * c_local   # a row shard s owns
+        rows[s, :r.size] = r
+        rows[s, r.size:] = pad
+    flat = rows.reshape(-1)
+    shr = NamedSharding(mesh, P(SHARD.DB_AXIS))
+    put = partial(jax.device_put, device=shr)
+    emb, a, b, o, v = _sharded_scatter(mesh)(
+        prev.emb, prev.model_a, prev.model_b, prev.outcome, prev.valid,
+        put(flat % c_local), put(db.emb[flat]), put(db.model_a[flat]),
+        put(db.model_b[flat]), put(db.outcome[flat]), put(db.valid[flat]))
+    return RouterState(global_ratings=g, emb=emb, model_a=a, model_b=b,
+                       outcome=o, valid=v, size=size)
+
+
 def commit(db, global_ratings, prev: Optional[RouterState] = None,
-           consumer: str = "default") -> RouterState:
+           consumer: str = "default",
+           mesh: Optional[Mesh] = None) -> RouterState:
     """Sync the host append buffer into a device RouterState.
 
     With a previous state of matching shape, only the rows touched since
@@ -152,7 +241,12 @@ def commit(db, global_ratings, prev: Optional[RouterState] = None,
 
     `consumer` names the dirty-row ledger to drain: each device replica
     of the buffer (e.g. the two halves of a DoubleBuffer) drains its own
-    ledger, so rows landing between two replicas' commits reach both."""
+    ledger, so rows landing between two replicas' commits reach both.
+
+    With a DB `mesh`, the returned state is capacity-sharded and every
+    dirty row is scattered only to its owning shard (DESIGN.md §12)."""
+    if mesh is not None:
+        return _commit_sharded(db, global_ratings, prev, consumer, mesh)
     rows = db.drain_dirty(consumer)
     if (prev is None or prev.emb.shape != db.emb.shape
             or prev.model_a.shape != db.model_a.shape):
@@ -194,14 +288,16 @@ class DoubleBuffer:
     its next turn."""
 
     def __init__(self, db, global_ratings, tags=("dbuf_a", "dbuf_b"),
-                 obs: Optional["OBS.Observability"] = None):
+                 obs: Optional["OBS.Observability"] = None,
+                 mesh: Optional[Mesh] = None):
         self.db = db
+        self.mesh = mesh   # capacity-sharded replicas when set (§12)
         db.register_consumer(tags[0])
         db.register_consumer(tags[1])
-        self._front = (commit(db, global_ratings, None, consumer=tags[0]),
-                       tags[0])
-        self._back = (commit(db, global_ratings, None, consumer=tags[1]),
-                      tags[1])
+        self._front = (commit(db, global_ratings, None, consumer=tags[0],
+                              mesh=mesh), tags[0])
+        self._back = (commit(db, global_ratings, None, consumer=tags[1],
+                             mesh=mesh), tags[1])
         self.obs = OBS.get_obs(obs)
         r = self.obs.registry
         self._m_swaps = r.counter(
@@ -228,7 +324,8 @@ class DoubleBuffer:
         self._g_backlog.set(len(self.db._dirty.get(tag, ())))
         t0 = time.perf_counter_ns()
         with self.obs.span("state.commit"):
-            new = commit(self.db, global_ratings, st, consumer=tag)
+            new = commit(self.db, global_ratings, st, consumer=tag,
+                         mesh=self.mesh)
         self._back, self._front = self._front, (new, tag)
         self._h_commit_us.observe((time.perf_counter_ns() - t0) / 1e3)
         self._m_swaps.inc()
@@ -357,4 +454,65 @@ def route_batch_choices(state: RouterState, query_embs, budgets, costs, *,
     choices, _, top_i = _route(state, query_embs, budgets, costs,
                                p_global, n_neighbors, k, backend, mode,
                                init_rating)
+    return RouteChoices(choices, top_i)
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "p_global", "n_neighbors", "k",
+                          "backend", "mode", "init_rating"))
+def route_batch_choices_sharded(state: RouterState, query_embs, budgets,
+                                costs, *, mesh: Mesh,
+                                p_global: float = 0.5,
+                                n_neighbors: int = 20, k: float = 32.0,
+                                backend: str = "reference",
+                                mode: str = "combined",
+                                init_rating: float = elo.DEFAULT_RATING
+                                ) -> RouteChoices:
+    """route_batch_choices over a capacity-sharded RouterState
+    (DESIGN.md §12): one jitted dispatch whose retrieval chain runs
+    under shard_map over the DB axis — per-shard similarity + local
+    top-k, cross-shard candidate merge, replicated replay/selection
+    epilogue. Bit-identical choices/topk_idx to the single-device
+    oracle; `mesh` is static so each DB mesh compiles its own
+    executable (the dispatch cache keys on it)."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    q = jnp.atleast_2d(jnp.asarray(query_embs, jnp.float32))
+    nq = q.shape[0]
+    m = state.n_models
+    n = min(n_neighbors, state.capacity)
+    costs = jnp.asarray(costs, jnp.float32)
+    budgets = jnp.broadcast_to(jnp.asarray(budgets, jnp.float32), (nq,))
+    if mode == "global":
+        # no retrieval: ratings/size replicate, so no shard_map either
+        scores = jnp.broadcast_to(state.global_ratings, (nq, m))
+        choices, _ = select_within_budget(scores, costs, budgets)
+        return RouteChoices(choices, jnp.full((nq, n), -1, jnp.int32))
+    if mode == "local":
+        init = jnp.full((m,), jnp.float32(init_rating))  # flat prior
+        p = 0.0   # 0*Global + 1*Local == Local, bit-exact for finite r
+    else:
+        init = state.global_ratings
+        p = p_global
+    axis = SHARD.DB_AXIS
+
+    def body(gr, init_b, emb, model_a, model_b, outcome, valid, size,
+             qq, bb, cc):
+        _, top_i, _, choices = KOPS.retrieve_replay_select_sharded(
+            qq, emb, model_a, model_b, outcome, valid, size, init_b, gr,
+            cc, bb, n=n, k=k, p=p, backend=backend, axis_name=axis)
+        return choices, top_i
+
+    shd = P(axis)
+    # check_rep=False: the merged epilogue output is replicated by
+    # construction (every shard reduces the same gathered pool), which
+    # shard_map's replication checker cannot prove through all_gather
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(), P(), shd, shd, shd, shd, shd,
+                             P(), P(), P(), P()),
+                   out_specs=(P(), P()), check_rep=False)
+    with jax.named_scope("eagle.retrieve_replay_select_sharded"):
+        choices, top_i = fn(state.global_ratings, init, state.emb,
+                            state.model_a, state.model_b, state.outcome,
+                            state.valid, state.size, q, budgets, costs)
     return RouteChoices(choices, top_i)

@@ -147,6 +147,31 @@ class VectorDB:
         ledger.clear()
         return rows
 
+    def drain_dirty_sharded(self, consumer: str = "default",
+                            n_shards: int = 1) -> list:
+        """Per-shard drain of `consumer`'s ledger: dirty rows grouped by
+        OWNING shard under the contiguous capacity partition (shard s
+        owns rows [s*C/S, (s+1)*C/S) — sharding.db_state_specs). The
+        sharded commit scatters each group only to its shard. Stale
+        rows at/past the live count are dropped here, same guard as the
+        unsharded commit's."""
+        rows = self.drain_dirty(consumer)
+        rows = rows[rows < self.size]
+        c_local = self.capacity // n_shards
+        return [rows[(rows >= s * c_local) & (rows < (s + 1) * c_local)]
+                for s in range(n_shards)]
+
+    def next_capacity(self, need_q: Optional[int] = None) -> int:
+        """The capacity _grow() will allocate when the buffer next
+        overflows (doubling policy). The dispatch-ladder prebaker
+        (core.dispatch.CapacityPrebaker) bakes executables for THIS
+        shape before the grow trips on the hot path."""
+        if need_q is None:
+            need_q = self.capacity + 1
+        if need_q <= self.capacity:
+            return self.capacity
+        return max(need_q, self.capacity * 2)
+
     def clear(self):
         """Roll the buffer back to empty without reallocating. Device
         states committed before the clear keep stale row contents, but

@@ -18,8 +18,9 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.elo_scan import elo_scan_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.retrieve_replay import (retrieve_replay_pallas,
-                                           retrieve_replay_select_pallas)
+from repro.kernels.retrieve_replay import (
+    retrieve_replay_pallas, retrieve_replay_select_pallas,
+    sharded_retrieve_replay_select_pallas)
 from repro.kernels.similarity_topk import similarity_pallas
 
 
@@ -85,6 +86,28 @@ def retrieve_replay_select(q, emb, model_a, model_b, outcome, valid, size,
                      partial(retrieve_replay_select_pallas, n=n, k=k, p=p),
                      q, emb, model_a, model_b, outcome, valid, size,
                      init_ratings, global_ratings, costs, budgets)
+
+
+def retrieve_replay_select_sharded(q, emb, model_a, model_b, outcome,
+                                   valid, size, init_ratings,
+                                   global_ratings, costs, budgets, *,
+                                   n: int, k: float = 32.0, p: float = 0.5,
+                                   backend: str = "reference",
+                                   axis_name: str = "db"):
+    """Capacity-sharded retrieve_replay_select: the per-shard body of
+    the DESIGN.md §12 routing chain. DB panels arrive as this shard's
+    contiguous row slice; candidates merge across `axis_name` inside.
+    Deliberately NOT jitted — it runs under shard_map inside the
+    caller's jit (core.state.route_batch_choices_sharded), where a
+    nested jit would only split the trace."""
+    return _dispatch(
+        backend,
+        partial(ref.sharded_retrieve_replay_select_ref, n=n, k=k, p=p,
+                axis_name=axis_name),
+        partial(sharded_retrieve_replay_select_pallas, n=n, k=k, p=p,
+                axis_name=axis_name),
+        q, emb, model_a, model_b, outcome, valid, size, init_ratings,
+        global_ratings, costs, budgets)
 
 
 @partial(jax.jit, static_argnames=("backend", "causal", "window"))

@@ -145,6 +145,75 @@ def retrieve_replay_select_ref(q, emb, model_a, model_b, outcome, valid,
         valid, size, init_ratings, n=n)
 
 
+def sharded_retrieve_replay_pipeline(similarity_fn, replay_fn, q, emb,
+                                     model_a, model_b, outcome, valid,
+                                     size, init_ratings, *, n,
+                                     axis_name):
+    """Per-shard body of the capacity-sharded retrieval chain, run
+    under shard_map over `axis_name` (DESIGN.md §12): the DB panels
+    arrive as this shard's CONTIGUOUS row range, the queries and the
+    replay prior arrive replicated. Stages:
+
+      local similarity panel -> global-row live mask -> local top
+      min(n, C_local) -> local candidate-record gather ->
+      cross-shard merge (all-gather + final top-n reduce, candidates'
+      records carried by position) -> farthest-first flatten ->
+      replicated replay + epilogue.
+
+    Bit-identical to retrieve_replay_pipeline over the full panels:
+    slicing the similarity matmul on the row dim leaves each score
+    column's D-accumulation untouched, and the merge's (shard, local
+    rank) pool order reproduces single-device top_k tie-breaking under
+    the contiguous partition (see shard_merge_topk). Like the
+    unsharded glue, both backends share this ONE copy."""
+    from repro.kernels.similarity_topk import (shard_local_topk,
+                                               shard_merge_topk)
+    scores = similarity_fn(q, emb)
+    c_local = emb.shape[0]
+    offset = jax.lax.axis_index(axis_name) * c_local
+    live = (jnp.arange(c_local) + offset) < size
+    scores = jnp.where(live[None, :], scores, -jnp.inf)
+    loc_s, loc_i = shard_local_topk(scores, n)
+    records = tuple(jnp.take(x, loc_i, axis=0)
+                    for x in (model_a, model_b, outcome, valid))
+    top_s, top_i, (ca, cb, cs, cv) = shard_merge_topk(
+        loc_s, loc_i + offset, records, n, axis_name)
+    hit = jnp.isfinite(top_s)
+    nq = q.shape[0]
+    # farthest-first flatten of the MERGED candidates — gather_records'
+    # replay-order contract, minus the row gather it already did
+    a = jnp.flip(ca, axis=1).reshape(nq, -1)
+    b = jnp.flip(cb, axis=1).reshape(nq, -1)
+    s = jnp.flip(cs, axis=1).reshape(nq, -1)
+    v = (jnp.flip(cv, axis=1)
+         & jnp.flip(hit, axis=1)[..., None]).reshape(nq, -1)
+    init = jnp.broadcast_to(init_ratings, (nq, init_ratings.shape[-1]))
+    out = replay_fn(init, a, b, s, v)
+    local, extras = (out[0], tuple(out[1:])) if isinstance(out, tuple) \
+        else (out, ())
+    return (local, top_i, top_s) + extras
+
+
+def sharded_retrieve_replay_select_ref(q, emb, model_a, model_b, outcome,
+                                       valid, size, init_ratings,
+                                       global_ratings, costs, budgets, *,
+                                       n, k=32.0, p=0.5,
+                                       axis_name="db"):
+    """Capacity-sharded retrieve_replay_select_ref: same fused replay +
+    budget-selection epilogue, run on the merged cross-shard
+    candidates. Returns (local (Q,M), topk_idx (Q,n) GLOBAL rows,
+    topk_scores, choices (Q,))."""
+
+    def replay_select(init, a, b, s, v):
+        local = elo_replay_ref(init, a, b, s, v, k=k)
+        combined = p * global_ratings[None, :] + (1.0 - p) * local
+        return local, budget_select_ref(combined, costs, budgets)
+
+    return sharded_retrieve_replay_pipeline(
+        similarity_ref, replay_select, q, emb, model_a, model_b, outcome,
+        valid, size, init_ratings, n=n, axis_name=axis_name)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0):
     """q: (B,S,H,dh), k/v: (B,T,Hk,dh). fp32 softmax reference."""
     b, s, h, dh = q.shape

@@ -21,7 +21,8 @@ from functools import partial
 import jax.numpy as jnp
 
 from repro.kernels.elo_scan import elo_scan_pallas, elo_scan_select_pallas
-from repro.kernels.ref import retrieve_replay_pipeline
+from repro.kernels.ref import (retrieve_replay_pipeline,
+                               sharded_retrieve_replay_pipeline)
 from repro.kernels.similarity_topk import similarity_pallas
 
 
@@ -69,3 +70,30 @@ def retrieve_replay_select_pallas(q, emb, model_a, model_b, outcome, valid,
     return retrieve_replay_pipeline(
         partial(similarity_pallas, interpret=interpret), replay_select, q,
         emb, model_a, model_b, outcome, valid, size, init_ratings, n=n)
+
+
+def sharded_retrieve_replay_select_pallas(q, emb, model_a, model_b,
+                                          outcome, valid, size,
+                                          init_ratings, global_ratings,
+                                          costs, budgets, *, n,
+                                          k: float = 32.0, p: float = 0.5,
+                                          axis_name: str = "db",
+                                          interpret: bool = False):
+    """Capacity-sharded retrieve_replay_select (per-shard shard_map
+    body, DESIGN.md §12): the similarity kernel runs on this shard's
+    row range of the DB, candidates cross shards through the shared
+    local-top-k/merge glue (sharded_retrieve_replay_pipeline), and the
+    fused ELO+selection kernel replays the merged records replicated.
+    Panel slicing leaves the kernel's per-column D-accumulation and its
+    (128, 256) blocking untouched, so the scores — and everything
+    downstream — stay bit-identical to the unsharded kernel."""
+
+    def replay_select(init, a, b, s, v):
+        return elo_scan_select_pallas(
+            init.astype(jnp.float32), a, b, s.astype(jnp.float32), v,
+            global_ratings, costs, budgets, p=p, k=k, interpret=interpret)
+
+    return sharded_retrieve_replay_pipeline(
+        partial(similarity_pallas, interpret=interpret), replay_select, q,
+        emb, model_a, model_b, outcome, valid, size, init_ratings, n=n,
+        axis_name=axis_name)

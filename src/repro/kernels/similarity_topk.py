@@ -51,3 +51,48 @@ def similarity_pallas(q, db, *, block_q: int = 128, block_n: int = 256,
         interpret=interpret,
     )(qp, dbp)
     return out[:qn, :n]
+
+
+# ---------------------------------------------------------------------------
+# capacity-sharded retrieval: local top-k + cross-shard merge (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def shard_local_topk(scores, n: int):
+    """Per-shard candidate reduce over a LOCAL score panel (Q, C_l):
+    keep min(n, C_l) candidates. That per-shard k is exact — any single
+    shard can contribute at most min(n, C_l) rows of the global top-n,
+    so the merged pool provably contains the true global top-n.
+    Returns (top_scores (Q, kl), top_local_idx (Q, kl))."""
+    return jax.lax.top_k(scores, min(n, scores.shape[-1]))
+
+
+def shard_merge_topk(top_s, top_i, payloads, n: int, axis_name: str):
+    """Cross-shard top-k merge: all-gather every shard's kl candidates
+    (XLA lowers the gather as a ring/tree exchange), pool them per
+    query, and take the final top-n reduce. `payloads` are per-shard
+    candidate tensors (Q, kl, ...) carried through the merge by
+    position, so the winners' records arrive with them and no second
+    cross-shard gather of arbitrary rows is needed.
+
+    Tie-breaking contract: the pool is ordered (shard asc, local rank
+    asc). jax.lax.top_k breaks ties toward the lowest index, and local
+    rank order is ascending-local-row among equal scores, so under the
+    CONTIGUOUS capacity partition equal-score candidates appear in
+    ascending GLOBAL row order — the final reduce is bit-identical to
+    a single-device top_k over the full panel, dead (-inf) rows
+    included. Returns (merged_s (Q,n), merged_i (Q,n), merged_payloads)."""
+    gather = partial(jax.lax.all_gather, axis_name=axis_name)
+
+    def pool(x):  # (S, Q, kl, ...) -> (Q, S*kl, ...)
+        s, q, kl = x.shape[:3]
+        return jnp.moveaxis(x, 0, 1).reshape((q, s * kl) + x.shape[3:])
+
+    pool_s, pool_i = pool(gather(top_s)), pool(gather(top_i))
+    merged_s, pos = jax.lax.top_k(pool_s, n)
+    merged_i = jnp.take_along_axis(pool_i, pos, axis=1)
+    merged_payloads = tuple(
+        jnp.take_along_axis(
+            pool(gather(p)),
+            pos.reshape(pos.shape + (1,) * (p.ndim - 2)), axis=1)
+        for p in payloads)
+    return merged_s, merged_i, merged_payloads

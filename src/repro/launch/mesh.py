@@ -34,3 +34,19 @@ def make_test_mesh(model: int = 1, data: int = 1):
     n = len(jax.devices())
     assert model * data <= n, f"need {model * data} devices, have {n}"
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_db_mesh(n_shards: int = 1):
+    """1-D mesh over the router-DB capacity axis (sharding.DB_AXIS):
+    RouterState panels partition their rows over these devices
+    (DESIGN.md §12). Kept separate from the fleet's (data, model)
+    serving meshes — the routing DB scales on its own axis.
+
+    On CPU hosts run under XLA_FLAGS=--xla_force_host_platform_device_count=N
+    (set BEFORE jax initializes) to expose multiple devices."""
+    from repro.sharding import DB_AXIS
+    devs = jax.devices()
+    assert len(devs) >= n_shards, (
+        f"DB mesh needs {n_shards} devices, found {len(devs)} — run under "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards}")
+    return jax.make_mesh((n_shards,), (DB_AXIS,), devices=devs[:n_shards])

@@ -15,15 +15,18 @@ from repro import obs as OBS
 from repro.configs import ARCH_IDS, get_reduced_config
 from repro.core.router import EagleConfig, EagleRouter
 from repro.data.routerbench import make_corpus, pairwise_feedback
+from repro.obs.alerts import LogFileSink
 from repro.obs.exporter import ObsExporter
 from repro.obs.quality import RouterQualityMonitor
+from repro.launch.mesh import make_db_mesh
 from repro.obs.slo import SLOEngine, default_serving_rules
 from repro.serving.admission import AdmissionQueue
 from repro.serving.engine import FleetModel, Request, ServingEngine
 
 
 def build_engine(n_fleet: int = 4, dim: int = 64, seed: int = 0,
-                 compare_rate: float = 0.25, obs=None):
+                 compare_rate: float = 0.25, obs=None, db_shards: int = 0,
+                 prebake: bool = False):
     names = ARCH_IDS[:n_fleet]
     corpus = make_corpus(seed=seed, n_per_dataset=60, dim=dim,
                          model_names=names,
@@ -37,25 +40,36 @@ def build_engine(n_fleet: int = 4, dim: int = 64, seed: int = 0,
              for i, n in enumerate(names)}
     oracle = lambda emb, mi: float(np.random.default_rng(
         abs(hash((emb[:2].tobytes(), mi))) % 2**32).random())
+    # db_shards > 0: capacity-shard the routing DB over a device mesh
+    # (DESIGN.md §12) — on CPU hosts this needs forced host devices,
+    # see launch.mesh.make_db_mesh
+    mesh = make_db_mesh(db_shards) if db_shards else None
     engine = ServingEngine(fleet, router, compare_rate=compare_rate,
-                           seed=seed, quality_oracle=oracle, obs=obs)
+                           seed=seed, quality_oracle=oracle, obs=obs,
+                           mesh=mesh, prebake=prebake)
     return engine, corpus
 
 
 def build_obs_plane(engine: ServingEngine, *, port: int = 0,
                     deadline_ms: float = 50.0,
-                    regret_bound: float = 50.0) -> ObsExporter:
+                    regret_bound: float = 50.0,
+                    alert_log: str = None) -> ObsExporter:
     """The operational plane over a launcher-built engine: quality
     monitor attached to the router's feedback leg + stock SLO rules
     over the engine's registry + a started scrape daemon. Returns the
     running exporter (stop() when done; port 0 picks an ephemeral
-    port, read it back from `.port`)."""
+    port, read it back from `.port`). `alert_log` attaches a
+    `LogFileSink` to both monitors: drift alerts and SLO page
+    transitions append webhook-shaped JSONL there."""
+    sinks = [LogFileSink(alert_log)] if alert_log else []
     quality = RouterQualityMonitor.for_router(engine.router,
-                                              obs=engine.obs)
+                                              obs=engine.obs,
+                                              sinks=sinks)
     engine.quality = quality
     slo = SLOEngine(engine.obs.registry,
                     default_serving_rules(deadline_ms=deadline_ms,
-                                          regret_bound=regret_bound))
+                                          regret_bound=regret_bound),
+                    sinks=sinks)
     return ObsExporter(engine.obs, slo=slo, quality=quality,
                        port=port).start()
 
@@ -110,14 +124,28 @@ def main():
     ap.add_argument("--serve-obs", type=int, default=None, metavar="PORT",
                     help="start the observability exporter on PORT "
                          "(0 = ephemeral) and enable span/event capture")
+    ap.add_argument("--alert-log", type=str, default=None, metavar="PATH",
+                    help="append webhook-shaped JSONL alerts (quality "
+                         "drift + SLO page transitions) to PATH "
+                         "(needs --serve-obs)")
+    ap.add_argument("--db-shards", type=int, default=0,
+                    help="capacity-shard the routing DB over N devices "
+                         "(CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--prebake", action="store_true",
+                    help="bake the next capacity bucket's executables "
+                         "in the background before the DB grows")
     args = ap.parse_args()
 
     obs = OBS.Observability(enabled=True) if args.serve_obs is not None \
         else None
-    engine, corpus = build_engine(args.fleet, seed=args.seed, obs=obs)
+    engine, corpus = build_engine(args.fleet, seed=args.seed, obs=obs,
+                                  db_shards=args.db_shards,
+                                  prebake=args.prebake)
     exporter = None
     if args.serve_obs is not None:
-        exporter = build_obs_plane(engine, port=args.serve_obs)
+        exporter = build_obs_plane(engine, port=args.serve_obs,
+                                   alert_log=args.alert_log)
         print(f"obs plane at http://127.0.0.1:{exporter.port} "
               f"(/metrics /trace /decisions /healthz /slo /quality)")
     rng = np.random.default_rng(args.seed)

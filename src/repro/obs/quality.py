@@ -194,7 +194,8 @@ class RouterQualityMonitor:
 
     def __init__(self, model_names: Sequence[str], costs, ratings, *,
                  cfg: QualityConfig = QualityConfig(),
-                 obs: Optional["OBS.Observability"] = None):
+                 obs: Optional["OBS.Observability"] = None,
+                 sinks: Sequence = ()):
         self.model_names = list(model_names)
         self.costs = np.asarray(costs, np.float64)
         self.ratings = np.asarray(ratings, np.float64).copy()
@@ -202,6 +203,10 @@ class RouterQualityMonitor:
             (len(self.model_names),)
         self.cfg = cfg
         self.obs = OBS.get_obs(obs)
+        # push delivery for drift alerts (obs.alerts): every _alert
+        # payload fans out to the registered sinks, error-isolated
+        from repro.obs.alerts import AlertSinkHub
+        self.sinks = AlertSinkHub(sinks, obs=self.obs)
         self.trajectories: Dict[str, deque] = {
             m: deque(maxlen=cfg.window) for m in self.model_names}
         self._rating_detectors = [
@@ -252,13 +257,14 @@ class RouterQualityMonitor:
     @classmethod
     def for_router(cls, router, *, cfg: QualityConfig = QualityConfig(),
                    obs: Optional["OBS.Observability"] = None,
-                   attach: bool = True) -> "RouterQualityMonitor":
+                   attach: bool = True,
+                   sinks: Sequence = ()) -> "RouterQualityMonitor":
         """Build from an EagleRouter (names/costs/current ratings) and,
         by default, attach so the feedback leg feeds the monitor."""
         mon = cls(router.model_names, np.asarray(router.costs),
                   np.asarray(router.global_ratings),
                   cfg=cfg, obs=obs if obs is not None
-                  else OBS.get_obs(router.obs))
+                  else OBS.get_obs(router.obs), sinks=sinks)
         if attach:
             router.quality = mon
         return mon
@@ -268,9 +274,13 @@ class RouterQualityMonitor:
         # counter always on (§9: metrics ungated); the typed event rides
         # the gated emit path like every other event
         self._m_alerts[kind].inc()
-        self.obs.emit({"kind": "quality_alert", "alert": kind,
-                       "z": float(z), "value": float(value),
-                       "fold": self._fold_seq, **extra})
+        payload = {"kind": "quality_alert", "alert": kind,
+                   "z": float(z), "value": float(value),
+                   "fold": self._fold_seq, **extra}
+        self.obs.emit(payload)
+        # push delivery: sink failures are isolated inside the hub —
+        # this runs on the feedback-fold path and must never raise
+        self.sinks.deliver(payload)
 
     @property
     def alerts_fired(self) -> int:

@@ -81,7 +81,8 @@ class SLOEngine:
     def __init__(self, registry, rules: Sequence[SLORule], *,
                  short_window: int = 12, long_window: int = 60,
                  page_burn: float = 0.5,
-                 obs: Optional["OBS.Observability"] = None):
+                 obs: Optional["OBS.Observability"] = None,
+                 sinks: Sequence = ()):
         assert 0 < short_window <= long_window and 0 < page_burn <= 1
         self.registry = registry
         self.rules = list(rules)
@@ -109,6 +110,11 @@ class SLOEngine:
                               "rule status: -1 no_data, 0 ok, 1 breach,"
                               " 2 page", rule=r.name)
             for r in self.rules}
+        # push delivery on the TRANSITION into page (obs.alerts): keyed
+        # per rule, so a rule that stays paged across scrapes pages
+        # once; leaving page re-arms the key (pages again on re-entry)
+        from repro.obs.alerts import AlertSinkHub
+        self.sinks = AlertSinkHub(sinks, registry=registry, obs=self.obs)
 
     # -- metric readout ------------------------------------------------------
     def _read(self, name: str, labels: Optional[Dict[str, str]],
@@ -174,6 +180,15 @@ class SLOEngine:
                 else:
                     status = "ok"
             self._g_status[rule.name].set(_STATUS_CODE[status])
+            page_key = ("slo_page", rule.name)
+            if status == "page":
+                self.sinks.deliver(
+                    {"kind": "slo_page", "rule": rule.name,
+                     "value": v, "bound": rule.bound, "op": rule.op,
+                     "burn_short": burn_s, "burn_long": burn_l},
+                    key=page_key)
+            else:
+                self.sinks.reset(page_key)
             if worst != "no_rules" and \
                     _SEVERITY[status] > _SEVERITY[worst]:
                 worst = status

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as OBS
-from repro.core.dispatch import RouteDispatcher, batch_bucket, bucket_ladder
+from repro.core.dispatch import (CapacityPrebaker, RouteDispatcher,
+                                 batch_bucket, bucket_ladder)
 from repro.core.router import EagleRouter
 from repro.core.state import DoubleBuffer
 from repro.models import transformer as T
@@ -111,7 +112,8 @@ class ServingEngine:
                  gen_max_bucket: int = 64,
                  gen_pad_len: Optional[int] = None,
                  quality: Optional["RouterQualityMonitor"] = None,
-                 now_ns: Callable[[], int] = time.time_ns):
+                 now_ns: Callable[[], int] = time.time_ns,
+                 mesh=None, prebake: bool = False):
         assert list(fleet) == router.model_names, "fleet/router order mismatch"
         self.fleet = fleet
         self.router = router
@@ -143,12 +145,20 @@ class ServingEngine:
         self.quality = quality
         if quality is not None:
             router.quality = quality
+        # with a DB mesh (launch.mesh.make_db_mesh) the dispatcher's
+        # executables and both buffer replicas are capacity-sharded
+        # (DESIGN.md §12); everything downstream is mesh-agnostic
+        self.mesh = mesh
         self.dispatch = dispatcher or RouteDispatcher.for_router(
-            router, obs=self.obs)
+            router, obs=self.obs, mesh=mesh)
         # two device replicas over the router's host buffer: route on
         # the front while commits scatter into the back, then swap
         self.dbuf = DoubleBuffer(router.db, router.global_ratings,
-                                 obs=self.obs)
+                                 obs=self.obs, mesh=mesh)
+        # optional background next-capacity bake (polled after commits)
+        # so a DB grow never recompiles on the hot path
+        self.prebaker = CapacityPrebaker(
+            self.dispatch, router.db, obs=self.obs) if prebake else None
         # typed serve metrics (the old ad-hoc `stats` dict, now a
         # registry; the `.stats` property keeps the legacy readout)
         r = self.obs.registry
@@ -315,6 +325,8 @@ class ServingEngine:
                     self._h_commit.observe(
                         (time.perf_counter() - tc) * 1e6)
                     self._m_commits.inc()
+                    if self.prebaker is not None:
+                        self.prebaker.poll()
         return responses
 
     def _emit_decisions(self, requests: Sequence[Request], budgets,

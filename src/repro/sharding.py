@@ -278,3 +278,46 @@ def make_constrainer(mesh: Mesh, global_batch: int, seq_axis=None,
 def tree_shardings(mesh: Mesh, spec_tree: Pytree) -> Pytree:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# router-DB capacity-axis sharding (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+#: mesh axis the RouterState DB panels partition over. Deliberately NOT
+#: "data"/"model": the routing DB shards on its own 1-D mesh so the
+#: router can scale independently of the fleet's serving meshes.
+DB_AXIS = "db"
+
+
+def db_state_specs() -> Dict[str, P]:
+    """PartitionSpec per RouterState field for the capacity partition:
+    every (C, ...) DB panel splits dim 0 over DB_AXIS into CONTIGUOUS
+    row ranges (shard s owns global rows [s*C/S, (s+1)*C/S)); the (M,)
+    ratings and the scalar live-row count replicate. Contiguity is
+    load-bearing: the cross-shard top-k merge orders its candidate pool
+    (shard, local rank), which is ascending-global-row order among
+    equal scores only under a contiguous split — that is what keeps
+    tie-breaking bit-identical to the single-device oracle."""
+    return dict(global_ratings=P(), emb=P(DB_AXIS), model_a=P(DB_AXIS),
+                model_b=P(DB_AXIS), outcome=P(DB_AXIS), valid=P(DB_AXIS),
+                size=P())
+
+
+def db_shard_count(mesh: Mesh) -> int:
+    return mesh.shape[DB_AXIS]
+
+
+def check_db_mesh(mesh: Mesh, capacity: int) -> int:
+    """Validate a DB mesh against a state capacity; returns the shard
+    count. Capacity must divide exactly — jit-boundary shardings take
+    no GSPMD padding, and the power-of-two capacity/bucket policy
+    (VectorDB._grow doubles) preserves divisibility for free."""
+    if DB_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"DB mesh must carry a {DB_AXIS!r} axis, got {mesh.axis_names}")
+    shards = db_shard_count(mesh)
+    if capacity % shards != 0:
+        raise ValueError(
+            f"capacity {capacity} does not divide over {shards} DB shards")
+    return shards

@@ -1,0 +1,211 @@
+"""Alert delivery tests (DESIGN.md §11, obs/alerts.py): sink fan-out
+with per-sink error isolation (a raising sink must not break the hot
+path), fire-once keying, SLO page-transition semantics (one page per
+incident, re-page after recovery), quality-drift push delivery, and
+the webhook-shaped JSONL file sink."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs as OBS
+from repro.obs.alerts import AlertSinkHub, LogFileSink
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.quality import QualityConfig, RouterQualityMonitor
+from repro.obs.slo import SLOEngine, SLORule
+
+
+class _Capture:
+    def __init__(self):
+        self.payloads = []
+
+    def __call__(self, payload):
+        self.payloads.append(payload)
+
+
+class _Boom:
+    def __init__(self):
+        self.calls = 0
+
+    def __call__(self, payload):
+        self.calls += 1
+        raise RuntimeError("webhook down")
+
+
+# ---------------------------------------------------------------------------
+# the hub
+# ---------------------------------------------------------------------------
+
+def test_hub_fans_out_and_counts():
+    reg = MetricsRegistry()
+    a, b = _Capture(), _Capture()
+    hub = AlertSinkHub([a], registry=reg).add_sink(b)
+    assert len(hub) == 2
+    assert hub.deliver({"kind": "x", "v": 1}) == 2
+    assert a.payloads == b.payloads == [{"kind": "x", "v": 1}]
+    assert reg.value("alert_sink_delivered_total") == 2
+    assert reg.value("alert_sink_errors_total") == 0
+
+
+def test_hub_isolates_raising_sink():
+    """A broken sink is counted, swallowed, and the remaining sinks
+    still receive the payload — delivery order notwithstanding."""
+    reg = MetricsRegistry()
+    boom, ok = _Boom(), _Capture()
+    hub = AlertSinkHub([boom, ok], registry=reg)
+    assert hub.deliver({"kind": "x"}) == 1   # only the good sink
+    assert boom.calls == 1
+    assert ok.payloads == [{"kind": "x"}]
+    assert reg.value("alert_sink_errors_total") == 1
+    assert reg.value("alert_sink_delivered_total") == 1
+    # repeated failures keep getting isolated, never raised
+    for _ in range(3):
+        hub.deliver({"kind": "x"})
+    assert reg.value("alert_sink_errors_total") == 4
+
+
+def test_hub_fire_once_key_and_reset():
+    reg = MetricsRegistry()
+    cap = _Capture()
+    hub = AlertSinkHub([cap], registry=reg)
+    assert hub.deliver({"kind": "p"}, key="k") == 1
+    assert hub.deliver({"kind": "p"}, key="k") == 0   # dropped
+    assert hub.deliver({"kind": "p"}, key="k2") == 1  # other key fine
+    hub.reset("k")
+    assert hub.deliver({"kind": "p"}, key="k") == 1   # re-armed
+    assert len(cap.payloads) == 3
+
+
+def test_hub_key_claimed_even_without_sinks():
+    """A key burned while no sinks were attached stays burned: a sink
+    added mid-incident must not get a stale page."""
+    hub = AlertSinkHub([], registry=MetricsRegistry())
+    assert hub.deliver({"kind": "p"}, key="k") == 0
+    cap = _Capture()
+    hub.add_sink(cap)
+    assert hub.deliver({"kind": "p"}, key="k") == 0
+    assert cap.payloads == []
+
+
+# ---------------------------------------------------------------------------
+# SLO page transitions
+# ---------------------------------------------------------------------------
+
+def _paged_engine(sinks):
+    reg = MetricsRegistry()
+    g = reg.gauge("depth")
+    eng = SLOEngine(reg, [SLORule("depth", "depth", "<=", 10.0)],
+                    short_window=4, long_window=8, page_burn=0.5,
+                    sinks=sinks)
+    return reg, g, eng
+
+
+def test_slo_page_delivers_once_per_incident():
+    cap = _Capture()
+    reg, g, eng = _paged_engine([cap])
+    g.set(5.0)
+    for _ in range(8):
+        eng.evaluate()
+    assert cap.payloads == []          # ok never delivers
+    g.set(50.0)
+    statuses = [eng.evaluate()["rules"][0]["status"] for _ in range(8)]
+    assert "page" in statuses
+    # many paged evaluations -> exactly ONE push
+    assert len(cap.payloads) == 1
+    p = cap.payloads[0]
+    assert p["kind"] == "slo_page" and p["rule"] == "depth"
+    assert p["value"] == 50.0 and p["bound"] == 10.0
+    assert p["burn_short"] >= 0.5 and p["burn_long"] >= 0.5
+
+
+def test_slo_repage_after_recovery_delivers_again():
+    cap = _Capture()
+    reg, g, eng = _paged_engine([cap])
+    g.set(50.0)
+    while eng.evaluate()["rules"][0]["status"] != "page":
+        pass
+    assert len(cap.payloads) == 1
+    g.set(5.0)                          # recover: re-arms the key
+    assert eng.evaluate()["rules"][0]["status"] == "ok"
+    g.set(50.0)                         # burn windows are still hot,
+    st = eng.evaluate()["rules"][0]["status"]   # so re-page is quick
+    while st != "page":
+        st = eng.evaluate()["rules"][0]["status"]
+    assert len(cap.payloads) == 2       # second incident, second page
+
+
+def test_slo_raising_sink_does_not_break_evaluate():
+    boom = _Boom()
+    reg, g, eng = _paged_engine([boom])
+    g.set(50.0)
+    for _ in range(10):
+        eng.evaluate()                  # must not raise
+    assert boom.calls == 1              # fire-once still applies
+    assert reg.value("alert_sink_errors_total") == 1
+
+
+# ---------------------------------------------------------------------------
+# quality-drift delivery
+# ---------------------------------------------------------------------------
+
+def _drifting_monitor(sinks):
+    cfg = QualityConfig(min_samples=8, z_threshold=4.0,
+                        ewma_alpha=0.2, min_std=1e-3)
+    return RouterQualityMonitor(["a", "b"], [1.0, 2.0],
+                                [1500.0, 1500.0], cfg=cfg, sinks=sinks)
+
+
+def test_quality_alert_pushes_to_sink():
+    cap = _Capture()
+    m = _drifting_monitor([cap])
+    rng = np.random.default_rng(0)
+    for _ in range(16):                 # stationary: no alerts
+        m.observe_ratings(1500.0 + rng.normal(0.0, 1.0, 2))
+    assert cap.payloads == []
+    m.observe_ratings([1500.0, 2500.0])  # level shift on model b
+    kinds = [p["alert"] for p in cap.payloads]
+    assert "rating_drift" in kinds
+    p = cap.payloads[0]
+    assert p["kind"] == "quality_alert" and abs(p["z"]) > 4.0
+
+
+def test_quality_raising_sink_does_not_break_fold():
+    boom, ok = _Boom(), _Capture()
+    m = _drifting_monitor([boom, ok])
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        m.observe_ratings(1500.0 + rng.normal(0.0, 1.0, 2))
+    m.observe_ratings([1500.0, 2500.0])  # must not raise
+    assert boom.calls >= 1
+    assert len(ok.payloads) == boom.calls   # good sink saw every alert
+    assert m.alerts_fired == boom.calls
+
+
+# ---------------------------------------------------------------------------
+# the file sink
+# ---------------------------------------------------------------------------
+
+def test_logfile_sink_webhook_shaped_jsonl(tmp_path):
+    path = tmp_path / "alerts.jsonl"
+    sink = LogFileSink(path)
+    sink({"kind": "quality_alert", "alert": "rating_drift", "z": 7.5})
+    sink({"kind": "slo_page", "rule": "depth"})
+    lines = path.read_text().strip().splitlines()
+    assert len(lines) == 2
+    docs = [json.loads(ln) for ln in lines]
+    assert [d["event"] for d in docs] == ["quality_alert", "slo_page"]
+    assert [d["seq"] for d in docs] == [1, 2]
+    assert docs[0]["payload"]["z"] == 7.5
+    assert docs[1]["payload"]["rule"] == "depth"
+    assert all("ts" in d for d in docs)
+
+
+def test_logfile_sink_on_engine_end_to_end(tmp_path):
+    path = tmp_path / "alerts.jsonl"
+    reg, g, eng = _paged_engine([LogFileSink(path)])
+    g.set(50.0)
+    for _ in range(8):
+        eng.evaluate()
+    docs = [json.loads(ln) for ln in
+            path.read_text().strip().splitlines()]
+    assert len(docs) == 1 and docs[0]["event"] == "slo_page"

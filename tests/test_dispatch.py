@@ -9,7 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.dispatch import (MIN_BUCKET, CompileCounter, RouteDispatcher,
+from repro.core.dispatch import (MIN_BUCKET, CapacityPrebaker,
+                                 CompileCounter, RouteDispatcher,
                                  batch_bucket, bucket_ladder,
                                  xla_compile_count)
 from repro.core.router import (EagleConfig, EagleRouter, GlobalOnlyRouter,
@@ -224,3 +225,70 @@ def test_double_buffer_routing_equivalence():
         r.feedback(rng.normal(size=(2, 8)).astype(np.float32),
                    [0, 1], [2, 3], [1.0, 0.0])
         dbuf.commit(r.global_ratings)
+
+
+# ---------------------------------------------------------------------------
+# capacity prebaker: zero hot-path compiles across a DB growth boundary
+# ---------------------------------------------------------------------------
+
+def test_prebaker_poll_gating():
+    """poll() is inert below the watermark, bakes once per capacity,
+    and never double-starts."""
+    r, _ = _router(capacity=64, n_prompts=40)
+    d = RouteDispatcher.for_router(r)
+    pb = CapacityPrebaker(d, r.db, watermark=0.75, batch_sizes=[4])
+    assert r.db.size < 0.75 * r.db.capacity
+    assert pb.poll() is False          # below watermark
+    rng = np.random.default_rng(3)
+    while r.db.size < 48:              # cross the watermark
+        r.update(rng.normal(size=(1, 8)).astype(np.float32),
+                 [0], [1], [1.0], query_id=[1000 + r.db.size])
+    assert pb.poll() is True           # bake for next_capacity (128)
+    pb.join()
+    assert pb.poll() is False          # 128 already baked
+    assert (d.bucket(4), 128, r.db.rcap, "combined", "reference",
+            None) in d._cache
+
+
+def test_prebaker_zero_hot_compiles_across_growth():
+    """200-step serving loop (route + feedback + commit) that crosses a
+    VectorDB growth boundary: with the prebaker polled after each
+    commit, the hot path never compiles — the grown capacity's ladder
+    and scatter are baked in the background before _grow() trips.
+    Background bake compiles land outside the counted regions (join()
+    runs between steps, where a serving loop would absorb them off the
+    critical path)."""
+    r, rng = _router(capacity=256, n_prompts=150, dim=8)
+    d = RouteDispatcher.for_router(r)
+    dbuf = DoubleBuffer(r.db, r.global_ratings)
+    pb = CapacityPrebaker(d, r.db, watermark=0.75, batch_sizes=[8])
+    q = rng.normal(size=(8, 8)).astype(np.float32)
+    budgets = rng.uniform(0.5, 6.0, 8).astype(np.float32)
+    # warmup at the CURRENT capacity: the ladder bucket plus two real
+    # feedback+commit cycles (the scatter only compiles on the first
+    # non-empty ledger — an empty-ledger commit would leave it cold)
+    d.warmup(dbuf.front, batch_sizes=[8])
+    next_row = 150
+    for _ in range(2):
+        r.update(rng.normal(size=(1, 8)).astype(np.float32),
+                 [0], [1], [1.0], query_id=[next_row])
+        next_row += 1
+        dbuf.commit(r.global_ratings)
+    d.route(dbuf.front, q, budgets)
+
+    hot = 0
+    start_capacity = r.db.capacity
+    for step in range(200):
+        c0 = xla_compile_count()
+        d.route(dbuf.front, q, budgets)
+        r.update(rng.normal(size=(1, 8)).astype(np.float32),
+                 [step % 5], [(step + 1) % 5], [float(step % 2)],
+                 query_id=[next_row])
+        next_row += 1
+        dbuf.commit(r.global_ratings)
+        hot += xla_compile_count() - c0
+        if pb.poll():
+            pb.join()                  # bake compiles: NOT hot-path
+    assert r.db.capacity > start_capacity, "loop never crossed a grow"
+    assert r.db.size > start_capacity
+    assert hot == 0, f"{hot} hot-path compiles across the growth"
